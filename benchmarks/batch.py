@@ -1,0 +1,29 @@
+"""Paper Fig. 10: hardware efficiency vs batch number (B in {64,128,256})."""
+from repro.core.scene import ConvScene
+from benchmarks.common import bench_scene, emit
+from benchmarks.channels import SCALES
+
+
+def rows(spatial=14):
+    out = []
+    for b in (64, 128, 256):
+        effs = []
+        for scale, channels in SCALES.items():
+            for c in channels:
+                sc = ConvScene(B=b, IC=c, OC=c, inH=spatial, inW=spatial,
+                               fltH=3, fltW=3, padH=1, padW=1)
+                r = bench_scene(sc)
+                effs.append(r["predicted_eff"])
+                out.append((f"fig10_b{b}_c{c}", r["us_per_call"],
+                            f"sched={r['schedule']};eff={r['predicted_eff']:.3f}"))
+        out.append((f"fig10_b{b}_avg", 0.0,
+                    f"avg_eff={sum(effs)/len(effs):.3f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

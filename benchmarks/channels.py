@@ -1,0 +1,37 @@
+"""Paper Fig. 9: hardware efficiency across channel scales.
+
+Three channel scales x 16 (IC, OC) scenes each, B=128, 14x14 spatial, 3x3
+filter — the paper's adaptability axis (i)."""
+from repro.core.scene import ConvScene
+from benchmarks.common import bench_scene, emit
+
+SCALES = {
+    "small": (16, 32, 48, 64),
+    "medium": (64, 128, 192, 256),
+    "big": (256, 512, 768, 1024),
+}
+
+
+def rows(batch=128, spatial=14):
+    out = []
+    for scale, channels in SCALES.items():
+        effs = []
+        for ic in channels:
+            for oc in channels:
+                sc = ConvScene(B=batch, IC=ic, OC=oc, inH=spatial, inW=spatial,
+                               fltH=3, fltW=3, padH=1, padW=1)
+                r = bench_scene(sc)
+                effs.append(r["predicted_eff"])
+                out.append((f"fig9_{scale}_ic{ic}_oc{oc}", r["us_per_call"],
+                            f"sched={r['schedule']};eff={r['predicted_eff']:.3f}"))
+        avg = sum(effs) / len(effs)
+        out.append((f"fig9_{scale}_avg", 0.0, f"avg_eff={avg:.3f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 13: per-network efficiency over the six real-world CNNs."""
+from repro.models.cnn import cnn_scenes
+from benchmarks.common import bench_scene, emit
+
+
+def rows(batch=128, measure_batch=4):
+    out = []
+    for net, scenes in cnn_scenes(batch).items():
+        effs, total_us = [], 0.0
+        for i, sc in enumerate(scenes):
+            r = bench_scene(sc, measure_batch=measure_batch)
+            effs.append((r["predicted_eff"], sc.flops))
+            total_us += r["us_per_call"]
+            out.append((f"fig13_{net}_L{i}", r["us_per_call"],
+                        f"sched={r['schedule']};eff={r['predicted_eff']:.3f}"))
+        # flops-weighted network efficiency (paper reports per-network)
+        wavg = sum(e * f for e, f in effs) / max(sum(f for _, f in effs), 1)
+        out.append((f"fig13_{net}_avg", total_us, f"weighted_eff={wavg:.3f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

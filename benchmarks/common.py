@@ -1,0 +1,62 @@
+"""Shared benchmark helpers.
+
+Honesty note (DESIGN.md §7): this container is a 1-core CPU, so wall times
+are CPU/XLA numbers that validate *relative* behavior; the paper's hardware-
+efficiency axis is reproduced via the analytic MXU model at paper scale
+(core/mapping.py), reported in the `derived` column.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import predicted_efficiency, select_schedule
+from repro.core.scene import ConvScene
+from repro.kernels import ref
+
+
+def time_call(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time in microseconds of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def bench_scene(scene: ConvScene, measure_batch: int = 2,
+                measure_max_ch: int = 128) -> dict:
+    """Benchmark one conv scene.
+
+    The `derived` metrics (selected schedule, predicted MXU efficiency) are
+    computed at FULL paper scale; the wall-clock `us_per_call` times a
+    channel/batch-capped instance — a 1-core CPU cannot time 1024-channel
+    paper scenes in reasonable wall time, and the CPU number only validates
+    relative behavior anyway (see module docstring)."""
+    choice = select_schedule(scene)
+    eff = predicted_efficiency(scene, choice)
+    small = ConvScene(**{**scene.__dict__,
+                         "B": min(scene.B, measure_batch),
+                         "IC": min(scene.IC, measure_max_ch),
+                         "OC": min(scene.OC, measure_max_ch)})
+    key = jax.random.PRNGKey(0)
+    inp = jax.random.normal(key, small.in_shape(), jnp.float32)
+    flt = jax.random.normal(key, small.flt_shape(), jnp.float32)
+    fn = jax.jit(lambda a, b: ref.conv_ref(a, b, small))
+    us = time_call(fn, inp, flt, iters=2)
+    return {"schedule": choice.schedule, "predicted_eff": eff,
+            "us_per_call": us, "bound": choice.bound,
+            "gflops_cpu": small.flops / us / 1e3}
+
+
+def emit(rows: Iterable[tuple]) -> None:
+    """CSV lines: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,29 @@
+"""Paper Fig. 11: hardware efficiency vs filter size (3,5,7,9,11)."""
+from repro.core.scene import ConvScene
+from benchmarks.common import bench_scene, emit
+from benchmarks.channels import SCALES
+
+
+def rows(batch=128, spatial=14):
+    out = []
+    for f in (3, 5, 7, 9, 11):
+        effs = []
+        for scale, channels in SCALES.items():
+            for c in channels:
+                sc = ConvScene(B=batch, IC=c, OC=c, inH=spatial, inW=spatial,
+                               fltH=f, fltW=f, padH=f // 2, padW=f // 2)
+                r = bench_scene(sc)
+                effs.append(r["predicted_eff"])
+                out.append((f"fig11_f{f}_c{c}", r["us_per_call"],
+                            f"sched={r['schedule']};eff={r['predicted_eff']:.3f}"))
+        out.append((f"fig11_f{f}_avg", 0.0,
+                    f"avg_eff={sum(effs)/len(effs):.3f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

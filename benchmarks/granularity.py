@@ -1,0 +1,41 @@
+"""Paper Fig. 14 + Table 2: the multi-grained mapping map, and multi-grained
+vs TB(8,8)-only ('simple convolution') average efficiency."""
+from repro.core.mapping import granularity_map, predicted_efficiency, \
+    select_schedule
+from repro.core.scene import ConvScene
+from benchmarks.common import emit
+
+CHANNELS = (16, 32, 64, 128, 256, 512, 1024)
+
+
+def rows():
+    out = []
+    for b in (64, 128, 256):
+        gmap = granularity_map([b], CHANNELS)
+        counts = {"TB11": 0, "TB18": 0, "TB88": 0}
+        eff_multi, eff_simple = [], []
+        for (bb, ic, oc), sched in gmap.items():
+            counts[sched] += 1
+            sc = ConvScene(B=bb, IC=ic, OC=oc, inH=14, inW=14, fltH=3,
+                           fltW=3, padH=1, padW=1)
+            eff_multi.append(predicted_efficiency(sc, select_schedule(sc)))
+            eff_simple.append(predicted_efficiency(
+                sc, select_schedule(sc, allowed=("TB88",))))
+            out.append((f"fig14_b{bb}_ic{ic}_oc{oc}", 0.0, f"grain={sched}"))
+        n = len(eff_multi)
+        small_frac = (counts["TB11"] + counts["TB18"]) / n
+        out.append((f"fig14_b{b}_coverage", 0.0,
+                    f"TB11+TB18_frac={small_frac:.2f};counts={counts}"))
+        out.append((f"table2_b{b}", 0.0,
+                    f"simple_eff={sum(eff_simple)/n:.3f};"
+                    f"mg3m_eff={sum(eff_multi)/n:.3f};"
+                    f"speedup={sum(eff_multi)/max(sum(eff_simple),1e-9):.2f}x"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

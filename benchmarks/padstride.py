@@ -1,0 +1,32 @@
+"""Paper Fig. 12: stability across padding/stride configurations."""
+from repro.core.scene import ConvScene
+from benchmarks.common import bench_scene, emit
+from benchmarks.channels import SCALES
+
+CONFIGS = [(0, 1), (1, 1), (0, 2), (1, 2)]  # (pad, stride)
+
+
+def rows(batch=128, spatial=14):
+    out = []
+    for pad, std in CONFIGS:
+        effs = []
+        for scale, channels in SCALES.items():
+            for c in channels:
+                sc = ConvScene(B=batch, IC=c, OC=c, inH=spatial, inW=spatial,
+                               fltH=3, fltW=3, padH=pad, padW=pad,
+                               stdH=std, stdW=std)
+                r = bench_scene(sc)
+                effs.append(r["predicted_eff"])
+                out.append((f"fig12_p{pad}s{std}_c{c}", r["us_per_call"],
+                            f"sched={r['schedule']};eff={r['predicted_eff']:.3f}"))
+        out.append((f"fig12_p{pad}s{std}_avg", 0.0,
+                    f"avg_eff={sum(effs)/len(effs):.3f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

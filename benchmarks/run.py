@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus roofline summaries if the
+dry-run sweep results are present)."""
+import argparse
+import json
+import os
+
+from benchmarks import batch, channels, cnns, filters, granularity, padstride
+from benchmarks.common import emit
+
+
+def roofline_rows():
+    out = []
+    rdir = os.path.join(os.path.dirname(__file__), "..", "results")
+    if not os.path.isdir(rdir):
+        return out
+    for fn in sorted(os.listdir(rdir)):
+        if fn.startswith("roofline_") and fn.endswith(".json"):
+            with open(os.path.join(rdir, fn)) as f:
+                d = json.load(f)
+            if d.get("status") != "ok":
+                continue
+            t = d["terms_s"]
+            bound = max(t.values())
+            out.append((f"roofline_{d['arch']}_{d['shape']}", bound * 1e6,
+                        f"dominant={d['dominant']};"
+                        f"frac={d.get('roofline_fraction', 0):.3f}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: channels,batch,filters,"
+                         "padstride,cnns,granularity,roofline")
+    args = ap.parse_args()
+    mods = {"channels": channels.rows, "batch": batch.rows,
+            "filters": filters.rows, "padstride": padstride.rows,
+            "cnns": cnns.rows, "granularity": granularity.rows,
+            "roofline": roofline_rows}
+    only = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for name in only:
+        emit(mods[name]())
+
+
+if __name__ == "__main__":
+    main()

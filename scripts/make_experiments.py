@@ -1,0 +1,92 @@
+"""Generate the EXPERIMENTS.md tables from results/*.json.
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > EXPERIMENTS_tables.md
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(pattern):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(mp=False):
+    cells = load(f"dryrun_*_{'mp' if mp else 'sp'}.json")
+    lines = ["| arch | shape | status | compile_s | state GB/chip | temp GB/chip | HLO GFLOP/chip | coll GB/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), d in sorted(cells.items()):
+        if d["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped (long_500k needs "
+                         f"sub-quadratic attn) | | | | | |")
+            continue
+        m, c = d["memory"], d["cost"]
+        coll = d["collectives"]["total_bytes"]
+        lines.append(
+            f"| {arch} | {shape} | {d['status']} | {d['compile_s']} | "
+            f"{fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} | "
+            f"{(c['flops'] or 0)/1e9:.0f} | {coll/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    cells = load("roofline_*.json")
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+             "| MODEL/HLO flops | roofline frac | what would move the dominant term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        "train_4k": {
+            "collective": "fewer FSDP re-gathers: larger microbatches or 2-pass remat (memory-bound tradeoff)",
+            "memory": "fuse elementwise chains / bf16 intermediates to cut HBM passes",
+            "compute": "near roofline for this mesh; more chips",
+        },
+        "prefill_32k": {
+            "collective": "ring-attention style KV pass instead of SP all-gathers",
+            "memory": "larger attention chunks (more VMEM reuse per HBM read)",
+            "compute": "causal-block skipping to halve masked-out FLOPs",
+        },
+        "decode_32k": {
+            "memory": "weight streaming floor: batch more tokens per weight read (speculative/multi-token)",
+            "collective": "head-local decode layout",
+            "compute": "-",
+        },
+        "long_500k": {
+            "memory": "state-streaming floor (recurrent archs)",
+            "collective": "-", "compute": "-",
+        },
+    }
+    for (arch, shape), d in sorted(cells.items()):
+        if d["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — | "
+                         f"pure full-attention arch (DESIGN.md) |")
+            continue
+        t = d["terms_s"]
+        note = notes.get(shape, {}).get(d["dominant"], "-")
+        lines.append(
+            f"| {arch} | {shape} | {max(t['compute'],0):.3f} | "
+            f"{max(t['memory'],0):.3f} | {max(t['collective'],0):.3f} | "
+            f"{d['dominant']} | {d['useful_ratio']:.2f} | "
+            f"{d['roofline_fraction']:.3f} | {note} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table(mp=False))
+    print("\n## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(mp=True))
+    print("\n## Roofline (single-pod, per chip, TPU v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s/link)\n")
+    print(roofline_table())

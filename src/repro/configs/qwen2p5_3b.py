@@ -1,0 +1,10 @@
+"""qwen2.5-3b [dense]: 36L d_model=2048 16H (GQA kv=2) d_ff=11008
+vocab=151936 — GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-3b", family="dense", n_layers=36, d_model=2048,
+    n_heads=16, n_kv_heads=2, d_head=128, d_ff=11008, vocab=151936,
+    norm="rms", mlp="swiglu", pos="rope", rope_theta=1000000.0, qkv_bias=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,108 @@
+"""Differentiable MG3MConv: custom_vjp so the Pallas forward kernel is
+trainable.
+
+The backward convolutions are themselves MG3M *scenes*:
+  * dIN  = conv(pad(dOUT), rot180(FLT) with IC/OC swapped)  — a fresh scene
+    whose granularity the selector picks independently (often a different
+    grain than the forward: dOUT has OC channels where IN had IC).
+  * dFLT[fh,fw,ic,oc] = sum_{oh,ow,b} IN[oh*s+fh-p, ow*s+fw-p, ic, b]
+                        * dOUT[oh,ow,oc,b]
+    — a "batch-contracted" MM_unit family, evaluated with the same fp32-
+    accumulated einsum the kernels use.
+
+Strided forward convs fall back to the jnp reference for dIN (the dilated
+scatter has no clean MG3M scene); this is recorded, not hidden.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scene import ConvScene
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+F32 = jnp.float32
+
+
+def _grad_input_scene(scene: ConvScene) -> ConvScene:
+    """The dIN convolution's scene (stride-1 forward only)."""
+    assert scene.stdH == 1 and scene.stdW == 1
+    return ConvScene(
+        B=scene.B, IC=scene.OC, OC=scene.IC,
+        inH=scene.outH, inW=scene.outW,
+        fltH=scene.fltH, fltW=scene.fltW,
+        padH=scene.fltH - 1 - scene.padH, padW=scene.fltW - 1 - scene.padW,
+        stdH=1, stdW=1, dtype=scene.dtype)
+
+
+def grad_input(d_out: jax.Array, flt: jax.Array, scene: ConvScene, *,
+               interpret: bool = True, use_pallas: bool = True) -> jax.Array:
+    """dL/dIN via a *forward* MG3MConv on the rotated, transposed filter."""
+    if scene.stdH != 1 or scene.stdW != 1:
+        # dilated-scatter case: jnp reference (documented fallback)
+        return _grad_input_ref(d_out, flt, scene)
+    gscene = _grad_input_scene(scene)
+    flt_rot = jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)   # rot180 + IC<->OC
+    return kops.mg3m_conv_op(d_out, flt_rot, gscene, interpret=interpret,
+                             use_pallas=use_pallas)
+
+
+def _grad_input_ref(d_out: jax.Array, flt: jax.Array, scene: ConvScene
+                    ) -> jax.Array:
+    """Exact adjoint via jax.vjp of the reference conv — conv is linear in
+    IN, so the primal point is irrelevant (zeros)."""
+    zero = jnp.zeros(scene.in_shape(), d_out.dtype)
+    _, vjp = jax.vjp(lambda i: ref.conv_ref(i, flt, scene), zero)
+    return vjp(d_out)[0]
+
+
+def grad_filter(inp: jax.Array, d_out: jax.Array, scene: ConvScene
+                ) -> jax.Array:
+    """dL/dFLT: batch+spatial-contracted MM_units (fp32 accumulation)."""
+    inp_p = jnp.pad(inp.astype(F32),
+                    ((scene.padH, scene.padH), (scene.padW, scene.padW),
+                     (0, 0), (0, 0)))
+    # window of IN aligned to each output pixel, per (fh, fw)
+    pieces = []
+    for fh in range(scene.fltH):
+        row = []
+        for fw in range(scene.fltW):
+            win = jax.lax.slice(
+                inp_p,
+                (fh, fw, 0, 0),
+                (fh + (scene.outH - 1) * scene.stdH + 1,
+                 fw + (scene.outW - 1) * scene.stdW + 1,
+                 scene.IC, scene.B),
+                (scene.stdH, scene.stdW, 1, 1))          # (outH,outW,IC,B)
+            g = jnp.einsum("hwib,hwob->io", win, d_out.astype(F32))
+            row.append(g)
+        pieces.append(jnp.stack(row))
+    return jnp.stack(pieces).astype(inp.dtype)           # (fh,fw,IC,OC)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def mg3m_conv_trainable(inp: jax.Array, flt: jax.Array, scene: ConvScene,
+                        schedule: Optional[str] = None,
+                        interpret: bool = True) -> jax.Array:
+    """Differentiable MG3MConv — Pallas forward, MG3M-scene backward."""
+    return kops.mg3m_conv_op(inp, flt, scene, schedule=schedule,
+                             interpret=interpret)
+
+
+def _fwd(inp, flt, scene, schedule, interpret):
+    out = mg3m_conv_trainable(inp, flt, scene, schedule, interpret)
+    return out, (inp, flt)
+
+
+def _bwd(scene, schedule, interpret, residuals, d_out):
+    inp, flt = residuals
+    d_in = grad_input(d_out, flt, scene, interpret=interpret)
+    d_flt = grad_filter(inp, d_out, scene)
+    return d_in, d_flt
+
+
+mg3m_conv_trainable.defvjp(_fwd, _bwd)

@@ -1,0 +1,219 @@
+"""Multi-grained mapping selector — the paper's core contribution, on TPU terms.
+
+MG3MConv (paper §4.1.2) chooses a *thread-block granularity* per convolution
+scene: TB(1,1) / TB(1,8) / TB(8,8).  On SW26010 those are zonings of the 8x8
+CPE grid.  A TPU TensorCore has no CPE grid — the Pallas grid is a *sequential
+pipeline* over one core — so the granularities translate to *grid schedules*
+that trade VMEM residency (data reuse) against MXU tile utilization:
+
+  TB11  whole-FLT VMEM residency, grid over spatial tasks only.
+        = the paper's TB(1,1) small-scene mapping *and* its `outLen ->
+        outH*outW` extreme filter reuse (Alg. 2): FLT is fetched from HBM
+        exactly once.  Best when the MM_unit (OC, B, IC) is small.
+
+  TB18  FLT is split along OC into slices that stay resident while the grid
+        sweeps all spatial tasks; IN is refetched once per OC-slice pass.
+        = TB(1,8): medium scenes where the full filter no longer fits VMEM.
+
+  TB88  classic 2D-tiled GEMM per output pixel: grid blocks (bm, bn, bk) over
+        (OC, B, IC*fltH*fltW) with a fp32 VMEM accumulator across reduction
+        steps.  = TB(8,8): large scenes where one MM_unit alone can fill the
+        machine.
+
+The selector is an analytic roofline model (compute term vs HBM-traffic term,
+with MXU tile-quantization waste) — the software analogue of paper Fig. 14.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.scene import ConvScene, ceil_div, round_up
+
+# TPU v5e model constants (per chip).  bf16 MXU rate; fp32 runs at half.
+MXU_FLOPS_BF16 = 197e12
+MXU_FLOPS_FP32 = MXU_FLOPS_BF16 / 2
+HBM_BW = 819e9  # bytes/s
+VMEM_BYTES = 16 * 2 ** 20
+# Leave headroom for Mosaic's double buffering (the paper's Alg.3 analogue
+# happens automatically: in-flight copies need the second buffer).
+VMEM_BUDGET = 12 * 2 ** 20
+LANE = 128    # minor-dim tile
+SUBLANE = 8   # second-minor tile (fp32)
+MXU_DIM = 128
+
+SCHEDULES = ("TB11", "TB18", "TB88")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """A concrete grid schedule for one scene."""
+
+    schedule: str          # TB11 | TB18 | TB88
+    bm: int                # OC block
+    bn: int                # B block
+    bk: int                # IC block (reduction); TB11/TB18 use full IC
+    predicted_s: float     # modeled runtime (seconds) on one v5e core
+    compute_s: float
+    hbm_s: float
+    vmem_bytes: int
+    notes: str = ""
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.hbm_s else "memory"
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _mxu_rate(dtype: str) -> float:
+    return MXU_FLOPS_BF16 if jnp.dtype(dtype).itemsize <= 2 else MXU_FLOPS_FP32
+
+
+def _quantized_macs(scene: ConvScene, bm: int, bn: int, bk: int) -> float:
+    """MACs the MXU actually burns, counting tile-quantization waste.
+
+    Every dot issued by a grid step is (bm x bk) @ (bk x bn); the MXU executes
+    it in ceil-divided 128x128x128 passes, so small blocks waste rows/cols —
+    the TPU analogue of the paper's K%4 / N%16 padding waste (§4.4.2).
+    """
+    eff_m = round_up(min(bm, scene.M), MXU_DIM)
+    eff_n = round_up(min(bn, scene.N), LANE)
+    # The systolic array streams the contraction dim; quantization there is
+    # only to the sublane tile.
+    eff_k = round_up(min(bk, scene.K), SUBLANE)
+    per_step = eff_m * eff_n * eff_k
+    n_steps = (
+        scene.num_spatial_tasks
+        * ceil_div(scene.M, bm)
+        * ceil_div(scene.N, bn)
+        * scene.fltH * scene.fltW
+        * ceil_div(scene.K, bk)
+    )
+    return per_step * n_steps
+
+
+def _traffic_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> int:
+    """HBM bytes moved under each schedule's residency pattern."""
+    it = _dtype_bytes(scene.dtype)
+    flt = scene.fltH * scene.fltW * scene.K * scene.M * it
+    in_win = scene.fltH * scene.fltW * scene.K * scene.N * it  # window per task
+    tasks = scene.num_spatial_tasks
+    out = scene.bytes_out()
+    n_m = ceil_div(scene.M, bm)
+    n_n = ceil_div(scene.N, bn)
+    if schedule == "TB11":
+        # FLT resident once; IN window streamed per task; OUT written once.
+        return flt + tasks * in_win + out
+    if schedule == "TB18":
+        # one pass over all tasks per OC slice: IN re-streamed n_m times.
+        return flt + n_m * tasks * in_win + out
+    # TB88: per task, classic tile traffic: FLT slice per (m, n) pass.
+    flt_per_task = flt  # each task needs the whole filter once per n-pass
+    return tasks * (n_n * flt_per_task + n_m * in_win) + out
+
+
+def _vmem_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> int:
+    it = _dtype_bytes(scene.dtype)
+    acc = 4 * bm * bn  # fp32 accumulator scratch
+    if schedule == "TB11":
+        flt_blk = scene.fltH * scene.fltW * scene.K * scene.M * it
+        in_blk = scene.K * scene.N * it
+        out_blk = scene.M * scene.N * it
+    elif schedule == "TB18":
+        flt_blk = scene.fltH * scene.fltW * scene.K * bm * it
+        in_blk = scene.K * scene.N * it
+        out_blk = bm * scene.N * it
+    else:
+        flt_blk = bk * bm * it
+        in_blk = bk * bn * it
+        out_blk = bm * bn * it
+    # x2: Mosaic double-buffers streamed operands (paper Alg. 3).
+    return 2 * (flt_blk + in_blk + out_blk) + acc
+
+
+def _score(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int
+           ) -> Optional[ScheduleChoice]:
+    vmem = _vmem_bytes(scene, schedule, bm, bn, bk)
+    if vmem > VMEM_BUDGET:
+        return None
+    macs = _quantized_macs(scene, bm, bn, bk)
+    compute_s = 2 * macs / _mxu_rate(scene.dtype)
+    hbm_s = _traffic_bytes(scene, schedule, bm, bn, bk) / HBM_BW
+    # Pallas fixed per-grid-step overhead (pipeline bubbles on tiny steps).
+    n_steps = (scene.num_spatial_tasks * ceil_div(scene.M, bm)
+               * ceil_div(scene.N, bn) * scene.fltH * scene.fltW
+               * ceil_div(scene.K, bk))
+    overhead_s = n_steps * 150e-9 * 0.05  # amortized issue overhead
+    total = max(compute_s, hbm_s) + overhead_s
+    return ScheduleChoice(schedule, bm, bn, bk, total, compute_s, hbm_s, vmem)
+
+
+def candidate_blocks(scene: ConvScene, schedule: str) -> Tuple[Tuple[int, int, int], ...]:
+    """Hardware-aligned (bm, bn, bk) candidates per schedule."""
+    m, n, k = scene.M, scene.N, scene.K
+    if schedule == "TB11":
+        return ((m, n, k),)
+    if schedule == "TB18":
+        cands = []
+        for bm in (64, 128, 256, 512):
+            if bm < m:
+                cands.append((bm, n, k))
+        cands.append((round_up(m, SUBLANE), n, k))
+        return tuple(dict.fromkeys(cands))
+    cands = []
+    for bm in (128, 256, 512):
+        for bn in (128, 256, 512):
+            for bk in (128, 256, 512):
+                cands.append((min(bm, round_up(m, SUBLANE)),
+                              min(bn, round_up(n, LANE)),
+                              min(bk, round_up(k, SUBLANE))))
+    return tuple(dict.fromkeys(cands))
+
+
+def select_schedule(scene: ConvScene,
+                    allowed: Tuple[str, ...] = SCHEDULES) -> ScheduleChoice:
+    """Pick the best (schedule, blocks) for a scene — paper Fig. 14 in code."""
+    best: Optional[ScheduleChoice] = None
+    for schedule in allowed:
+        for bm, bn, bk in candidate_blocks(scene, schedule):
+            choice = _score(scene, schedule, bm, bn, bk)
+            if choice is not None and (best is None
+                                       or choice.predicted_s < best.predicted_s):
+                best = choice
+    if best is None:
+        # Nothing fits VMEM even fully blocked (huge IC*B): force TB88 with
+        # the smallest aligned blocks; the kernel wrapper will tile further.
+        bm, bn, bk = (min(128, round_up(scene.M, SUBLANE)),
+                      min(128, round_up(scene.N, LANE)),
+                      min(128, round_up(scene.K, SUBLANE)))
+        choice = _score(scene, "TB88", bm, bn, bk)
+        if choice is None:
+            raise ValueError(f"no feasible schedule for {scene.describe()}")
+        best = choice
+    return best
+
+
+def granularity_map(b_values, c_values, dtype: str = "float32",
+                    spatial: int = 14, flt: int = 3) -> Dict[Tuple[int, int, int], str]:
+    """Reproduce paper Fig. 14: best grain per (B, IC, OC) grid."""
+    out = {}
+    for b in b_values:
+        for ic in c_values:
+            for oc in c_values:
+                scene = ConvScene(B=b, IC=ic, OC=oc, inH=spatial, inW=spatial,
+                                  fltH=flt, fltW=flt, padH=flt // 2,
+                                  padW=flt // 2, dtype=dtype)
+                out[(b, ic, oc)] = select_schedule(scene).schedule
+    return out
+
+
+def predicted_efficiency(scene: ConvScene, choice: ScheduleChoice) -> float:
+    """Useful FLOPs / (peak FLOPs x modeled time) — the paper's
+    'hardware efficiency' metric under the analytic model."""
+    ideal_s = scene.flops / _mxu_rate(scene.dtype)
+    return min(1.0, ideal_s / max(choice.predicted_s, 1e-30))

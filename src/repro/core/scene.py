@@ -1,0 +1,139 @@
+"""Convolution *scene* descriptor — the unit the multi-grained selector reasons about.
+
+The paper (MG3MConv, §4.1) decomposes a convolution into ``outH*outW*fltH*fltW``
+small matrix multiplications (``MM_unit``) with dims
+
+    M = OC   (output channels)
+    N = B    (batch)
+    K = IC   (input channels)
+
+over data layouts IN[inH, inW, IC, B], FLT[fltH, fltW, IC, OC],
+OUT[outH, outW, OC, B].  A ``ConvScene`` captures everything the mapping
+selector (core/mapping.py) needs to choose a grid schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvScene:
+    """Static description of one convolution problem (paper Table 1 symbols)."""
+
+    B: int
+    IC: int
+    OC: int
+    inH: int
+    inW: int
+    fltH: int
+    fltW: int
+    padH: int = 0
+    padW: int = 0
+    stdH: int = 1
+    stdW: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if min(self.B, self.IC, self.OC, self.inH, self.inW, self.fltH, self.fltW) <= 0:
+            raise ValueError(f"all scene dims must be positive: {self}")
+        if self.stdH <= 0 or self.stdW <= 0:
+            raise ValueError("stride must be positive")
+        if self.padH < 0 or self.padW < 0:
+            raise ValueError("padding must be non-negative")
+        if self.outH <= 0 or self.outW <= 0:
+            raise ValueError(f"empty output for scene {self}")
+
+    # -- derived spatial dims ------------------------------------------------
+    @property
+    def outH(self) -> int:
+        return (self.inH + 2 * self.padH - self.fltH) // self.stdH + 1
+
+    @property
+    def outW(self) -> int:
+        return (self.inW + 2 * self.padW - self.fltW) // self.stdW + 1
+
+    # -- MM_unit dims (paper §4.1.1) ------------------------------------------
+    @property
+    def M(self) -> int:  # noqa: N802  (paper symbol)
+        return self.OC
+
+    @property
+    def N(self) -> int:  # noqa: N802
+        return self.B
+
+    @property
+    def K(self) -> int:  # noqa: N802
+        return self.IC
+
+    @property
+    def num_spatial_tasks(self) -> int:
+        """Independent MM_unit accumulation chains (= output pixels)."""
+        return self.outH * self.outW
+
+    @property
+    def reduction_len(self) -> int:
+        """Accumulation depth of one output pixel: IC * fltH * fltW."""
+        return self.IC * self.fltH * self.fltW
+
+    # -- cost terms ------------------------------------------------------------
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates of the whole convolution."""
+        return self.B * self.OC * self.outH * self.outW * self.reduction_len
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    def bytes_in(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return itemsize * (
+            self.inH * self.inW * self.IC * self.B
+            + self.fltH * self.fltW * self.IC * self.OC
+        )
+
+    def bytes_out(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return itemsize * self.outH * self.outW * self.OC * self.B
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.bytes_in() + self.bytes_out())
+
+    # -- shapes in the paper's layouts ------------------------------------------
+    def in_shape(self) -> Tuple[int, int, int, int]:
+        return (self.inH, self.inW, self.IC, self.B)
+
+    def flt_shape(self) -> Tuple[int, int, int, int]:
+        return (self.fltH, self.fltW, self.IC, self.OC)
+
+    def out_shape(self) -> Tuple[int, int, int, int]:
+        return (self.outH, self.outW, self.OC, self.B)
+
+    def padded_in_shape(self) -> Tuple[int, int, int, int]:
+        return (self.inH + 2 * self.padH, self.inW + 2 * self.padW, self.IC, self.B)
+
+    def describe(self) -> str:
+        return (
+            f"scene(B={self.B} IC={self.IC} OC={self.OC} "
+            f"in={self.inH}x{self.inW} flt={self.fltH}x{self.fltW} "
+            f"pad={self.padH},{self.padW} std={self.stdH},{self.stdW} "
+            f"MM_unit M={self.M} N={self.N} K={self.K} "
+            f"tasks={self.num_spatial_tasks} AI={self.arithmetic_intensity:.1f})"
+        )
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def pow2_floor(x: int) -> int:
+    return 1 if x <= 1 else 2 ** int(math.floor(math.log2(x)))

@@ -1,0 +1,191 @@
+"""MG3MConv Pallas TPU kernels — multi-grained implicit-GEMM convolution.
+
+Three grid schedules mirror the paper's TB granularities (see
+core/mapping.py for the selection model):
+
+  TB11: grid (outH, outW, fltH, fltW); whole FLT resident in VMEM (fetched
+        from HBM exactly once = the paper's outLen->max filter reuse), IN
+        window streamed per output pixel, fp32 VMEM accumulator revisited
+        across the (fh, fw) reduction steps.
+  TB18: grid (n_m, outH, outW, fltH, fltW); an OC-slice of FLT stays
+        resident while the grid sweeps every spatial task.
+  TB88: grid (outH, outW, n_m, n_n, fltH, fltW, n_k); classic 2D+K tiled
+        GEMM per output pixel.
+
+All kernels consume a *spatially pre-padded* input (ops.py applies padH/padW
+and aligns channel dims), layouts per the paper:
+  IN [inHp, inWp, K, N]   FLT [fltH, fltW, K, M]   OUT [outH, outW, M, N]
+with M=OC, N=B, K=IC.  Accumulation is always fp32 (the TPU analogue of the
+paper's DPD kernels), cast to the IO dtype on the final store.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scene import ConvScene, ceil_div
+
+
+def _dot_kt(flt_blk: jax.Array, in_blk: jax.Array) -> jax.Array:
+    """(K, M) x (K, N) -> (M, N) contracting K (the paper's MM_unit, Eq. 2).
+
+    FLT is consumed in its natural [.., IC, OC] layout: no transposition, the
+    TPU analogue of the paper's `ldde`-broadcast trick (§4.4.1)."""
+    return jax.lax.dot_general(
+        flt_blk, in_blk,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# --------------------------------------------------------------------------
+# TB11: whole-FLT residency
+# --------------------------------------------------------------------------
+def _tb11_kernel(in_ref, flt_ref, out_ref, acc_ref, *, flt_hw: Tuple[int, int],
+                 out_dtype):
+    fh = pl.program_id(2)
+    fw = pl.program_id(3)
+    first = jnp.logical_and(fh == 0, fw == 0)
+    last = jnp.logical_and(fh == flt_hw[0] - 1, fw == flt_hw[1] - 1)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    flt_blk = flt_ref[fh, fw]          # (K, M) dynamic-sliced from resident FLT
+    in_blk = in_ref[0, 0]              # (K, N)
+    acc_ref[...] += _dot_kt(flt_blk, in_blk)
+
+    @pl.when(last)
+    def _store():
+        out_ref[0, 0] = acc_ref[...].astype(out_dtype)
+
+
+def conv_tb11(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
+              interpret: bool = False) -> jax.Array:
+    """inp pre-padded [inHp, inWp, K, N]; returns [outH, outW, M, N]."""
+    fh, fw, k, m = flt.shape
+    n = inp.shape[-1]
+    grid = (scene.outH, scene.outW, fh, fw)
+    kernel = functools.partial(_tb11_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, k, n),
+                         lambda oh, ow, i, j: (oh * scene.stdH + i,
+                                               ow * scene.stdW + j, 0, 0)),
+            pl.BlockSpec((fh, fw, k, m), lambda oh, ow, i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m, n), lambda oh, ow, i, j: (oh, ow, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
+        scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(inp, flt)
+
+
+# --------------------------------------------------------------------------
+# TB18: OC-sliced FLT residency
+# --------------------------------------------------------------------------
+def _tb18_kernel(in_ref, flt_ref, out_ref, acc_ref, *, flt_hw: Tuple[int, int],
+                 out_dtype):
+    fh = pl.program_id(3)
+    fw = pl.program_id(4)
+    first = jnp.logical_and(fh == 0, fw == 0)
+    last = jnp.logical_and(fh == flt_hw[0] - 1, fw == flt_hw[1] - 1)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _dot_kt(flt_ref[fh, fw], in_ref[0, 0])
+
+    @pl.when(last)
+    def _store():
+        out_ref[0, 0] = acc_ref[...].astype(out_dtype)
+
+
+def conv_tb18(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
+              interpret: bool = False) -> jax.Array:
+    fh, fw, k, m = flt.shape
+    n = inp.shape[-1]
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm, scene.outH, scene.outW, fh, fw)
+    kernel = functools.partial(_tb18_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, k, n),
+                         lambda mm, oh, ow, i, j: (oh * scene.stdH + i,
+                                                   ow * scene.stdW + j, 0, 0)),
+            pl.BlockSpec((fh, fw, k, bm), lambda mm, oh, ow, i, j: (0, 0, 0, mm)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, n),
+                               lambda mm, oh, ow, i, j: (oh, ow, mm, 0)),
+        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(inp, flt)
+
+
+# --------------------------------------------------------------------------
+# TB88: fully tiled GEMM per output pixel
+# --------------------------------------------------------------------------
+def _tb88_kernel(in_ref, flt_ref, out_ref, acc_ref, *, red_dims, out_dtype):
+    fh = pl.program_id(4)
+    fw = pl.program_id(5)
+    kk = pl.program_id(6)
+    nfh, nfw, nk = red_dims
+    first = (fh == 0) & (fw == 0) & (kk == 0)
+    last = (fh == nfh - 1) & (fw == nfw - 1) & (kk == nk - 1)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _dot_kt(flt_ref[0, 0], in_ref[0, 0])
+
+    @pl.when(last)
+    def _store():
+        out_ref[0, 0] = acc_ref[...].astype(out_dtype)
+
+
+def conv_tb88(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
+              bn: int, bk: int, interpret: bool = False) -> jax.Array:
+    fh, fw, k, m = flt.shape
+    n = inp.shape[-1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, bm, n, bn, k, bk)
+    nk = k // bk
+    grid = (scene.outH, scene.outW, m // bm, n // bn, fh, fw, nk)
+    kernel = functools.partial(_tb88_kernel, red_dims=(fh, fw, nk),
+                               out_dtype=inp.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bk, bn),
+                         lambda oh, ow, mm, nn, i, j, kk: (
+                             oh * scene.stdH + i, ow * scene.stdW + j, kk, nn)),
+            pl.BlockSpec((1, 1, bk, bm),
+                         lambda oh, ow, mm, nn, i, j, kk: (i, j, kk, mm)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn),
+                               lambda oh, ow, mm, nn, i, j, kk: (oh, ow, mm, nn)),
+        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(inp, flt)

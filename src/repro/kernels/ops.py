@@ -1,0 +1,99 @@
+"""Jit'd public wrappers around the MG3MConv Pallas kernels.
+
+Responsibilities (the paper's "CG-level" housekeeping, §4.1):
+  * spatial pre-padding (padH/padW) so kernels never see out-of-bounds reads;
+  * channel/batch alignment padding so grid blocks divide exactly (zero
+    padding is semantically inert for the K reduction and sliced off for
+    M/N) — the TPU analogue of the paper's 16 remainder-case kernels;
+  * schedule dispatch via the multi-grained selector.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import ScheduleChoice, select_schedule
+from repro.core.scene import ConvScene, round_up
+from repro.kernels import mg3m_conv, ref
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    cur = x.shape[axis]
+    if cur == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - cur)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("scene", "choice", "interpret"))
+def _mg3m_conv_impl(inp: jax.Array, flt: jax.Array, scene: ConvScene,
+                    choice: ScheduleChoice, interpret: bool) -> jax.Array:
+    # Spatial pre-padding (paper keeps pad handling outside the assembly kernel
+    # via the `if ih, iw exist` guard; zero-padding is the branch-free analogue).
+    inp_p = jnp.pad(inp, ((scene.padH, scene.padH), (scene.padW, scene.padW),
+                          (0, 0), (0, 0)))
+    m, n, k = scene.M, scene.N, scene.K
+    if choice.schedule == "TB11":
+        out = mg3m_conv.conv_tb11(inp_p, flt, scene, interpret=interpret)
+    elif choice.schedule == "TB18":
+        bm = min(choice.bm, m)
+        mp = round_up(m, bm)
+        flt_a = _pad_axis(flt, 3, mp)
+        out = mg3m_conv.conv_tb18(inp_p, flt_a, scene, bm=bm,
+                                  interpret=interpret)[:, :, :m, :]
+    else:  # TB88
+        bm, bn, bk = (min(choice.bm, m), min(choice.bn, n), min(choice.bk, k))
+        mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+        inp_a = _pad_axis(_pad_axis(inp_p, 2, kp), 3, np_)
+        flt_a = _pad_axis(_pad_axis(flt, 2, kp), 3, mp)
+        out = mg3m_conv.conv_tb88(inp_a, flt_a, scene, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)[:, :, :m, :n]
+    return out
+
+
+def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
+                 schedule: Optional[str] = None,
+                 interpret: bool = True,
+                 use_pallas: bool = True) -> jax.Array:
+    """Multi-grained convolution in the paper's layouts.
+
+    Args:
+      inp: [inH, inW, IC, B]; flt: [fltH, fltW, IC, OC].
+      schedule: force "TB11"/"TB18"/"TB88"; None = multi-grained auto-select.
+      interpret: run the Pallas kernel in interpret mode (CPU validation);
+        set False on real TPU.
+      use_pallas: False routes to the pure-jnp reference (used by the
+        distributed model code on CPU-only dry-runs).
+    Returns: [outH, outW, OC, B].
+    """
+    assert inp.shape == scene.in_shape(), (inp.shape, scene.in_shape())
+    assert flt.shape == scene.flt_shape(), (flt.shape, scene.flt_shape())
+    if not use_pallas:
+        return ref.conv_ref(inp, flt, scene)
+    if schedule is None:
+        choice = select_schedule(scene)
+    else:
+        choice = select_schedule(scene, allowed=(schedule,))
+    return _mg3m_conv_impl(inp, flt, scene, choice, interpret)
+
+
+def causal_conv1d_op(x: jax.Array, w: jax.Array, *, block_l: int = 256,
+                     block_d: int = 256, interpret: bool = True,
+                     use_pallas: bool = True) -> jax.Array:
+    """Depthwise causal conv1d (Mamba2's conv) — see kernels/causal_conv1d.py."""
+    from repro.kernels import causal_conv1d
+    if not use_pallas:
+        return ref.causal_conv1d_ref(x, w)
+    b, l, d = x.shape
+    bl = min(block_l, l)
+    bd = min(block_d, d)
+    lp, dp = round_up(l, bl), round_up(d, bd)
+    x_a = _pad_axis(_pad_axis(x, 1, lp), 2, dp)
+    w_a = _pad_axis(w, 1, dp)
+    out = causal_conv1d.causal_conv1d(x_a, w_a, block_l=bl, block_d=bd,
+                                      interpret=interpret)
+    return out[:, :l, :d]

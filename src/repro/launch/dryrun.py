@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      [--multi-pod] [--out results.json]
+
+Proves the distribution config is coherent without hardware: compiles under
+the production mesh, prints memory_analysis() (fits 16 GB/chip?) and
+cost_analysis() (FLOPs/bytes for the roofline), and extracts per-chip
+collective bytes from the optimized (post-SPMD) HLO.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ALIASES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.train import step as S
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096,128]' -> bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _loop_trip_counts(hlo: str):
+    """Map while-loop body computation name -> trip count (from the canonical
+    XLA counted-loop pattern), so collectives inside scans are multiplied."""
+    # trip counts from "condition" computations: compare(iter, constant)
+    trips = {}
+    for m in re.finditer(
+            r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)", hlo):
+        cond, body = m.groups()
+        cm = re.search(
+            re.escape(cond) + r"[\s\S]{0,2000}?compare\([^)]*\)[^\n]*",
+            hlo)
+        trip = None
+        if cm:
+            km = re.search(r"s32\[\][^\n]*constant\((\d+)\)",
+                           hlo[max(0, cm.start() - 2000):cm.end()])
+            if km:
+                trip = int(km.group(1))
+        trips[body] = trip
+    return trips
+
+
+def collective_bytes_per_chip(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op in the optimized
+    (post-partition, per-chip shapes) HLO, weighted by loop trip count.
+
+    Source-precision correction: the CPU backend implements bf16 dots by
+    upcasting operands to f32, so `convert(bf16->f32)` lands ABOVE the weight
+    all-gathers in this HLO.  On TPU the dot is native bf16 and XLA sinks
+    converts below collectives, so a gather whose operand is an upcast is
+    counted at the source dtype."""
+    # operand id -> (dtype, upcast-source dtype or None)
+    def_dtype = {}
+    for m in re.finditer(
+            r"%?([\w.\-]+) = (\w+)\[[\d,]*\][^ ]* (\w[\w\-]*)\(%?([\w.\-]+)",
+            hlo):
+        name, dt, opc, first_operand = m.groups()
+        def_dtype[name] = (dt, opc, first_operand)
+
+    def source_scale(operand: str, result_dt: str) -> float:
+        """Smallest dtype within a short upstream chain of converts/copies/
+        convert-fusions — the precision XLA:TPU would gather at."""
+        best = _DTYPE_BYTES.get(result_dt, 4)
+        cur = operand
+        for _ in range(8):
+            if cur not in def_dtype:
+                break
+            dt, opc, nxt = def_dtype[cur]
+            best = min(best, _DTYPE_BYTES.get(dt, 4))
+            passthrough = opc in ("convert", "copy", "bitcast", "reshape",
+                                  "transpose", "all-gather", "parameter")
+            if opc == "fusion" and ("convert" in cur or "copy" in cur):
+                passthrough = True
+            if not passthrough:
+                break
+            cur = nxt
+        return best / _DTYPE_BYTES.get(result_dt, 4)
+
+    current = None
+    counts = {c: 0 for c in _COLLECTIVES}
+    sizes = {c: 0 for c in _COLLECTIVES}
+    trips = _loop_trip_counts(hlo)
+    for line in hlo.splitlines():
+        if line and not line.startswith(" ") and "{" in line:
+            nm = re.match(r"%?([\w.\-]+)", line.strip())
+            if nm:
+                current = nm.group(1)
+        for c in _COLLECTIVES:
+            if re.search(rf"= \S+ {c}\(", line) or \
+               re.search(rf"= \S+ {c}-start\(", line):
+                shape = re.search(r"= (\S+) " + c, line)
+                b = _shape_bytes(shape.group(1)) if shape else 0
+                scale = 1.0
+                opm = re.search(rf"{c}(?:-start)?\(%?([\w.\-]+)", line)
+                if opm and shape:
+                    dt = _SHAPE_RE.match(shape.group(1))
+                    if dt:
+                        scale = source_scale(opm.group(1), dt.group(1))
+                mult = 1
+                if current is not None:
+                    for body, t in trips.items():
+                        if current.startswith(body) and t:
+                            mult = t
+                            break
+                counts[c] += mult
+                sizes[c] += int(b * scale) * mult
+    return {"counts": counts, "bytes": sizes,
+            "total_bytes": int(sum(sizes.values()))}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             opts: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    kind = SHAPES[shape]["kind"]
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "pure full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    if kind == "train":
+        lowered = S.lower_train_step(cfg, shape, mesh)
+    else:
+        lowered = S.lower_serve_step(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_per_chip(hlo)
+
+    result = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops") if cost else None,
+            "bytes_accessed": cost.get("bytes accessed") if cost else None,
+        },
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    print(json.dumps(result, indent=2))
+    print("memory_analysis:", mem)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALIASES))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_cell(args.arch, args.shape, args.multi_pod)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    sys.exit(0 if result["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

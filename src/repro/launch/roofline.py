@@ -1,0 +1,169 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis per (arch x shape) cell — single-pod mesh.
+
+Methodology (why probes, not the full program):
+XLA's cost_analysis() counts while-loop (lax.scan) bodies ONCE — a scanned
+126-layer model under-reports FLOPs by ~126x, and chunked-attention inner
+scans under-report further.  So each cell is probed with a variant program
+whose loops are gone:
+
+  * layers unrolled (cfg.unroll_layers=True) at L=1 and L=2: every cost is
+    affine in L, cost(L) = cost(1) + (cost(2)-cost(1))*(L-1).  The L-probe
+    difference includes remat recompute (the unrolled bwd re-runs the fwd
+    body), which is exactly what MODEL_FLOPS/HLO_FLOPS is meant to expose.
+  * FLOPS from UNCHUNKED-attention probes (q_chunk=0: no inner loop, exact
+    count); BYTES and COLLECTIVES from PRODUCTION-CHUNKED probes — unchunked
+    attention materializes S^2 score chains that the production flash path
+    keeps on-chip, which would inflate the memory term ~10x.  (The SSD/GLA
+    inter-chunk recurrences keep a scan, but their bodies are O(state)
+    elementwise — relative undercount < 1e-3.)
+  * train probes lower ONE microbatch with the optimizer skipped
+    (plan.skip_update); per-step cost = n_mb * probe + analytic AdamW cost
+    (~15 flops + ~20 bytes per local param — negligible flops, ~10% bytes).
+
+Terms (per chip, TPU v5e): compute = FLOPS/197e12, memory = bytes/819e9,
+collective = collective_bytes/50e9.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.configs.registry import ALIASES, get_config
+from repro.launch.dryrun import collective_bytes_per_chip
+from repro.launch.mesh import make_production_mesh
+from repro.train import step as S
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+OPT_FLOPS_PER_PARAM = 15.0
+OPT_BYTES_PER_PARAM = 20.0
+
+
+def _probe_cfg(cfg: ArchConfig, n_units: int, chunked: bool) -> ArchConfig:
+    """Clone cfg with n_units scan units, unrolled; optionally unchunked
+    attention (exact FLOPs) vs production chunking (realistic bytes)."""
+    if cfg.family == "hybrid":
+        tail = cfg.n_layers % cfg.attn_every
+        n_layers = n_units * cfg.attn_every + tail
+    else:
+        n_layers = n_units
+    kw = {} if chunked else {"q_chunk": 0, "kv_chunk": 0}
+    return dataclasses.replace(cfg, n_layers=n_layers, unroll_layers=True,
+                               **kw)
+
+
+def _layer_units(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.family == "hybrid" \
+        else cfg.n_layers
+
+
+def _probe(cfg: ArchConfig, shape: str, mesh, n_mb_real: int) -> dict:
+    kind = SHAPES[shape]["kind"]
+    if kind == "train":
+        b = SHAPES[shape]["global_batch"]
+        plan = S.StepPlan(n_microbatches=1, skip_update=True)
+        lowered = S.lower_train_step(cfg, shape, mesh, plan=plan,
+                                     batch_override=max(b // n_mb_real, 1))
+    else:
+        lowered = S.lower_serve_step(cfg, shape, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_per_chip(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "coll_counts": coll["counts"],
+    }
+
+
+def model_flops(cfg: ArchConfig, shape: str) -> float:
+    spec = SHAPES[shape]
+    kind = spec["kind"]
+    tokens = spec["global_batch"] * (spec["seq_len"] if kind != "decode" else 1)
+    n = cfg.active_param_count()
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def run_cell(arch: str, shape: str) -> dict:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": "pure full-attention arch (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    kind = SHAPES[shape]["kind"]
+    n_mb = S.default_plan(cfg, shape, mesh).n_microbatches \
+        if kind == "train" else 1
+    t0 = time.time()
+    pf1 = _probe(_probe_cfg(cfg, 1, chunked=False), shape, mesh, n_mb)
+    pf2 = _probe(_probe_cfg(cfg, 2, chunked=False), shape, mesh, n_mb)
+    uses_flash = not cfg.attention_free and kind != "decode"
+    if uses_flash:  # bytes/collectives from the production-chunked program
+        pb1 = _probe(_probe_cfg(cfg, 1, chunked=True), shape, mesh, n_mb)
+        pb2 = _probe(_probe_cfg(cfg, 2, chunked=True), shape, mesh, n_mb)
+    else:
+        pb1, pb2 = pf1, pf2
+    lu = _layer_units(cfg)
+
+    def corrected(p1, p2, key: str) -> float:
+        per_step = p1[key] + (p2[key] - p1[key]) * (lu - 1)
+        return per_step * n_mb
+
+    flops = corrected(pf1, pf2, "flops")
+    byts = corrected(pb1, pb2, "bytes")
+    coll = corrected(pb1, pb2, "coll_bytes")
+    p2 = pb2
+    if kind == "train":  # analytic AdamW add-back (fully sharded: no comms)
+        local_params = cfg.param_count() / n_chips
+        flops += OPT_FLOPS_PER_PARAM * local_params
+        byts += OPT_BYTES_PER_PARAM * local_params
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / LINK_BW
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (collective_s, "collective"))[1]
+    mf = model_flops(cfg, shape)
+    hlo_global = flops * n_chips
+    bound_s = max(compute_s, memory_s, collective_s)
+    result = {
+        "arch": arch, "shape": shape, "status": "ok", "n_chips": n_chips,
+        "n_microbatches": n_mb,
+        "per_chip": {"flops": flops, "bytes": byts, "collective_bytes": coll},
+        "terms_s": {"compute": compute_s, "memory": memory_s,
+                    "collective": collective_s},
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else None,
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) / bound_s
+        if bound_s > 0 else None,
+        "coll_counts_probe2": p2["coll_counts"],
+        "probe_s": round(time.time() - t0, 1),
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALIASES))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run_cell(args.arch, args.shape)
+    print(json.dumps(result, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch qwen3-14b --shape train_4k \
+        [--multi-pod] [--steps N] [--ckpt-dir DIR] [--smoke]
+
+On a real TPU slice this runs under `jax.distributed.initialize()` with one
+process per host; `--smoke` runs the same code path on this CPU container
+with the reduced config and a 1x1 mesh (CI-checkable end-to-end).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ALIASES, get_config, reduced
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.parallel import ctx, sharding
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as O
+from repro.train import step as S
+from repro.train.ft import StragglerMonitor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALIASES))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the host mesh (CPU-runnable)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = reduced(get_config(args.arch))
+        mesh = make_host_mesh()
+        batch_size, seq = 8, 64
+        plan = S.StepPlan(n_microbatches=2, tp=False)
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        batch_size = SHAPES[args.shape]["global_batch"]
+        seq = SHAPES[args.shape]["seq_len"]
+        plan = S.default_plan(cfg, args.shape, mesh)
+
+    opt_cfg = O.AdamWConfig(total_steps=args.steps,
+                            moments_dtype="bfloat16"
+                            if cfg.param_count() >= 30e9 else "float32")
+    step_fn, hooks = S.build_train_step(cfg, mesh, opt_cfg, plan)
+    data = SyntheticLM(cfg.vocab, batch_size, seq, host_id=jax.process_index(),
+                       n_hosts=jax.process_count())
+    monitor = StragglerMonitor()
+
+    with mesh:
+        with ctx.activation_sharding(hooks):
+            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            state = S.TrainState(
+                params, O.init_opt_state(params, opt_cfg.moments_dtype))
+            start = 0
+            last = ckpt.latest_step(args.ckpt_dir)
+            if last is not None:
+                sspec = S.state_pspecs(cfg, state, mesh, plan.tp)
+                state, extra = ckpt.restore(args.ckpt_dir, last, state,
+                                            mesh=mesh, specs=sspec)
+                start = extra["next_step"]
+                print(f"resumed at step {start}")
+            jstep = jax.jit(step_fn, donate_argnums=(0,))
+            for step in range(start, args.steps):
+                batch = jax.tree.map(jnp.asarray, data.batch_at(step))
+                t0 = time.time()
+                state, metrics = jstep(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                if monitor.record(step, dt):
+                    print(f"straggler at step {step}: {dt:.2f}s")
+                if step % 10 == 0:
+                    print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                          f"{dt*1e3:.0f}ms")
+                if (step + 1) % args.ckpt_every == 0:
+                    ckpt.save(args.ckpt_dir, step + 1, state,
+                              extra={"next_step": step + 1})
+                    ckpt.retain(args.ckpt_dir)
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""CNN zoo for the paper's own evaluation (Fig. 13): AlexNet, VGG, GoogLeNet,
+ResNet, SqueezeNet, YOLO — as lists of convolution *scenes* (the paper
+benchmarks per-layer conv hardware efficiency, not end-to-end accuracy),
+plus a small runnable CNN classifier built on mg3m_conv_nhwc for the
+end-to-end example/tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import mg3m_conv_nhwc
+from repro.core.scene import ConvScene
+from repro.models.layers import trunc_normal
+
+Params = Dict[str, jax.Array]
+
+
+def _s(b, ic, oc, hw, f, pad, std, in_hw=None) -> ConvScene:
+    return ConvScene(B=b, IC=ic, OC=oc, inH=in_hw or hw, inW=in_hw or hw,
+                     fltH=f, fltW=f, padH=pad, padW=pad, stdH=std, stdW=std)
+
+
+def cnn_scenes(batch: int = 128) -> Dict[str, List[ConvScene]]:
+    """Representative conv layers of the six CNNs (paper Fig. 13 workload).
+
+    Channel/spatial configs from the original architectures; batch follows
+    the paper's batch-number experiments.
+    """
+    b = batch
+    return {
+        "alexnet": [
+            _s(b, 3, 64, 224, 11, 2, 4), _s(b, 64, 192, 27, 5, 2, 1),
+            _s(b, 192, 384, 13, 3, 1, 1), _s(b, 384, 256, 13, 3, 1, 1),
+            _s(b, 256, 256, 13, 3, 1, 1),
+        ],
+        "vgg": [
+            _s(b, 3, 64, 224, 3, 1, 1), _s(b, 64, 64, 224, 3, 1, 1),
+            _s(b, 64, 128, 112, 3, 1, 1), _s(b, 128, 128, 112, 3, 1, 1),
+            _s(b, 128, 256, 56, 3, 1, 1), _s(b, 256, 256, 56, 3, 1, 1),
+            _s(b, 256, 512, 28, 3, 1, 1), _s(b, 512, 512, 28, 3, 1, 1),
+            _s(b, 512, 512, 14, 3, 1, 1),
+        ],
+        "googlenet": [
+            _s(b, 3, 64, 224, 7, 3, 2), _s(b, 64, 192, 56, 3, 1, 1),
+            _s(b, 192, 96, 28, 1, 0, 1), _s(b, 96, 128, 28, 3, 1, 1),
+            _s(b, 16, 32, 28, 5, 2, 1),   # inception 3a/5x5 (paper's example)
+            _s(b, 480, 192, 14, 1, 0, 1), _s(b, 112, 224, 14, 3, 1, 1),
+        ],
+        "resnet": [
+            _s(b, 3, 64, 224, 7, 3, 2), _s(b, 64, 64, 56, 1, 0, 1),
+            _s(b, 64, 64, 56, 3, 1, 1), _s(b, 64, 256, 56, 1, 0, 1),
+            _s(b, 256, 128, 56, 1, 0, 2), _s(b, 128, 128, 28, 3, 1, 1),
+            _s(b, 512, 256, 28, 1, 0, 2), _s(b, 256, 256, 14, 3, 1, 1),
+            _s(b, 1024, 512, 14, 1, 0, 2), _s(b, 512, 512, 7, 3, 1, 1),
+        ],
+        "squeezenet": [
+            _s(b, 3, 96, 224, 7, 2, 2), _s(b, 96, 16, 55, 1, 0, 1),
+            _s(b, 16, 64, 55, 1, 0, 1), _s(b, 16, 64, 55, 3, 1, 1),
+            _s(b, 128, 32, 27, 1, 0, 1), _s(b, 32, 128, 27, 3, 1, 1),
+            _s(b, 256, 48, 13, 1, 0, 1), _s(b, 48, 192, 13, 3, 1, 1),
+        ],
+        "yolo": [
+            _s(b, 3, 16, 448, 3, 1, 1), _s(b, 16, 32, 224, 3, 1, 1),
+            _s(b, 32, 64, 112, 3, 1, 1), _s(b, 64, 128, 56, 3, 1, 1),
+            _s(b, 128, 256, 28, 3, 1, 1), _s(b, 256, 512, 14, 3, 1, 1),
+            _s(b, 512, 1024, 7, 3, 1, 1),
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Small runnable classifier on MG3MConv (end-to-end example / tests)
+# ---------------------------------------------------------------------------
+def init_small_cnn(key, *, in_ch: int = 3, n_classes: int = 10,
+                   width: int = 16, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": trunc_normal(ks[0], (3, 3, in_ch, width), 0.1, dtype),
+        "c2": trunc_normal(ks[1], (3, 3, width, width * 2), 0.05, dtype),
+        "c3": trunc_normal(ks[2], (3, 3, width * 2, width * 4), 0.05, dtype),
+        "head": trunc_normal(ks[3], (width * 4, n_classes), 0.05, dtype),
+    }
+
+
+def small_cnn_forward(p: Params, x: jax.Array, *, use_pallas: bool = False,
+                      schedule=None) -> jax.Array:
+    """x: [B, H, W, C] -> logits [B, n_classes].  All convs via MG3MConv.
+
+    use_pallas=True routes through the differentiable kernel path
+    (core/autodiff.mg3m_conv_trainable) so the whole CNN trains through the
+    Pallas forward."""
+    from repro.core.autodiff import mg3m_conv_trainable
+    from repro.core.scene import ConvScene
+
+    def conv(x, w, stride):
+        if not use_pallas:
+            return mg3m_conv_nhwc(x, w, stride=(stride, stride),
+                                  padding=(1, 1), schedule=schedule,
+                                  use_pallas=False)
+        b, hh, ww, c = x.shape
+        sc = ConvScene(B=b, IC=c, OC=w.shape[3], inH=hh, inW=ww,
+                       fltH=w.shape[0], fltW=w.shape[1], padH=1, padW=1,
+                       stdH=stride, stdW=stride, dtype=str(x.dtype))
+        out = mg3m_conv_trainable(jnp.transpose(x, (1, 2, 3, 0)), w, sc,
+                                  schedule)
+        return jnp.transpose(out, (3, 0, 1, 2))
+    x = jax.nn.relu(conv(x, p["c1"], 1))
+    x = jax.nn.relu(conv(x, p["c2"], 2))
+    x = jax.nn.relu(conv(x, p["c3"], 2))
+    x = x.mean(axis=(1, 2))                       # global average pool
+    return x @ p["head"]

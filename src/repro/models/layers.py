@@ -1,0 +1,290 @@
+"""Shared model layers: norms, RoPE, MLPs, GQA attention (train flash path +
+decode path with KV cache).  Pure functions over param dicts — no framework
+dependency.  All matmuls accumulate fp32 via preferred_element_type."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import ctx
+
+Params = Dict[str, jax.Array]
+F32 = jnp.float32
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(key, d, norm: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, norm: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    if norm == "rms":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(jnp.var(xf, -1) + eps)[..., None]
+    out = xf * p["scale"].astype(F32)
+    if norm == "ln":
+        out = out + p["bias"].astype(F32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMS over head_dim with a learned per-dim scale (qwen3)."""
+    xf = x.astype(F32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def rope_tables(positions: jax.Array, d_head: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int -> cos/sin (..., d_head/2) fp32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B?, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    # insert the head dim; positions were (S,) or (B, S)
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    if cos.ndim < x.ndim:              # (S, 1, D/2) -> (1, S, 1, D/2)
+        cos, sin = cos[None], sin[None]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sin_embedding(positions: jax.Array, d_model: int) -> jax.Array:
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, f: int, kind: str, dtype, n_layers: int = 1) -> Params:
+    ks = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, (f ** -0.5) / math.sqrt(2 * n_layers)
+    p = {"w_up": trunc_normal(ks[0], (d, f), std_in, dtype),
+         "w_down": trunc_normal(ks[1], (f, d), std_out, dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = trunc_normal(ks[2], (d, f), std_in, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    # bf16-in/bf16-out matmuls (f32 MXU accumulation happens inside the dot);
+    # see _project_qkv for why outputs must not be f32.
+    up = ctx.constrain(jnp.einsum("...d,df->...f", x, p["w_up"]), "hidden")
+    if kind == "swiglu":
+        gate = ctx.constrain(jnp.einsum("...d,df->...f", x, p["w_gate"]),
+                             "hidden")
+        h = (jax.nn.silu(gate.astype(F32)) * up.astype(F32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(up.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 500000.0
+    use_rope: bool = True
+
+
+def init_attention(key, spec: AttnSpec, dtype, n_layers: int = 1) -> Params:
+    ks = jax.random.split(key, 5)
+    d, dh = spec.d_model, spec.d_head
+    std_in = d ** -0.5
+    std_out = (spec.n_heads * dh) ** -0.5 / math.sqrt(2 * n_layers)
+    p = {
+        "wq": trunc_normal(ks[0], (d, spec.n_heads * dh), std_in, dtype),
+        "wk": trunc_normal(ks[1], (d, spec.n_kv_heads * dh), std_in, dtype),
+        "wv": trunc_normal(ks[2], (d, spec.n_kv_heads * dh), std_in, dtype),
+        "wo": trunc_normal(ks[3], (spec.n_heads * dh, d), std_out, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((spec.n_heads * dh,), dtype)
+        p["bk"] = jnp.zeros((spec.n_kv_heads * dh,), dtype)
+        p["bv"] = jnp.zeros((spec.n_kv_heads * dh,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, spec: AttnSpec, positions: jax.Array):
+    # NOTE: projection outputs stay in the IO dtype (bf16).  An f32 output
+    # here makes the *cotangent* f32, and GSPMD then all-gathers an f32 copy
+    # of every weight in the backward pass — 2x the FSDP collective bytes
+    # (measured in EXPERIMENTS.md §Perf iter 1).  The MXU accumulates in f32
+    # internally regardless.
+    b, s, _ = x.shape
+    dh = spec.d_head
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = ctx.constrain(q.astype(x.dtype).reshape(b, s, spec.n_heads, dh),
+                      "heads")
+    k = ctx.constrain(k.astype(x.dtype).reshape(b, s, spec.n_kv_heads, dh),
+                      "heads")
+    v = ctx.constrain(v.astype(x.dtype).reshape(b, s, spec.n_kv_heads, dh),
+                      "heads")
+    if spec.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if spec.use_rope:
+        cos, sin = rope_tables(positions, dh, spec.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention (pure JAX 'flash').
+
+    Memory is O(q_chunk x kv_chunk) per (batch, head): this is what lets the
+    32k-prefill cell fit, and is the JAX-native analogue of the paper's
+    LDM-blocked accumulation (§4.3).  GQA is computed grouped — repeated KV
+    heads are never materialized.
+    q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D)
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_chunk = min(q_chunk, s) if q_chunk else s     # 0 = unchunked
+    kv_chunk = min(kv_chunk, t) if kv_chunk else t
+    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, q_chunk, t, kv_chunk)
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = d ** -0.5
+    qg = q.reshape(b, nq, q_chunk, hkv, g, d)
+    kg = k.reshape(b, nk, kv_chunk, hkv, d)
+    vg = v.reshape(b, nk, kv_chunk, hkv, d)
+
+    def q_block(qi_idx):
+        qi = qg[:, qi_idx]                        # (B, qc, Hkv, G, D)
+        q_pos = qi_idx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_idx):
+            m, l, acc = carry
+            kj = kg[:, kj_idx]                    # (B, kc, Hkv, D)
+            vj = vg[:, kj_idx]
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                                preferred_element_type=F32) * scale
+            if causal:
+                k_pos = kj_idx * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                scores = jnp.where(mask, scores, -1e30)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=F32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), -1e30, F32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), F32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), F32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhgqd->bqhgd", out)    # (B, qc, Hkv, G, D)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))    # (nq, B, qc, Hkv, G, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """q: (B, 1, Hq, D) against cache (B, T, Hkv, D); positions >= length masked.
+    length: (B,) valid cache length per sample (the new token's position + 1)."""
+    b, _, hq, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=F32) * (d ** -0.5)
+    mask = jnp.arange(t)[None, :] < length[:, None]          # (B, T)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attention_train(p: Params, x: jax.Array, spec: AttnSpec,
+                    q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, spec, positions)
+    out = flash_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk)
+    out = out.reshape(b, s, spec.n_heads * spec.d_head)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]).astype(x.dtype)
+
+
+def attention_prefill(p: Params, x: jax.Array, spec: AttnSpec,
+                      q_chunk: int = 512, kv_chunk: int = 1024
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Like attention_train but also returns the KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, spec, positions)
+    out = flash_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk)
+    out = out.reshape(b, s, spec.n_heads * spec.d_head)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"]).astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(p: Params, x: jax.Array, spec: AttnSpec,
+                     cache: Dict[str, jax.Array], position: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d); cache k/v: (B, T, Hkv, D); position: (B,) write index."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, spec, position[:, None])
+    # scatter the new KV into the cache at `position`
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, position].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, position].set(v[:, 0])
+    out = decode_attention(q, k_cache, v_cache, position + 1)
+    out = out.reshape(b, 1, spec.n_heads * spec.d_head)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"]).astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}

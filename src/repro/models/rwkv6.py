@@ -1,0 +1,214 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): data-dependent per-channel decay.
+
+Baseline time-mix uses a lax.scan over time (compact HLO, memory-bound).
+`rwkv6_timemix_chunked` is the beyond-paper optimized path (GLA-style chunked
+matmul form) used by the perf hillclimb — both validated against each other
+in tests.
+
+Per head (head size N), state S in R^{NxN} (key-dim x value-dim):
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(x))) in (0,1), data-dependent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+
+F32 = jnp.float32
+Params = Dict[str, jax.Array]
+LORA_R = 32
+HEAD_SIZE = 64
+
+
+def init_rwkv6_layer(key, d: int, d_ff: int, dtype, n_layers: int = 1) -> Params:
+    h = d // HEAD_SIZE
+    ks = jax.random.split(key, 12)
+    std = d ** -0.5
+    std_o = std / math.sqrt(2 * n_layers)
+    return {
+        # token-shift mix vectors (r, k, v, w, g) + base
+        "mu_base": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "lora_A": trunc_normal(ks[0], (d, 5 * LORA_R), std, dtype),
+        "lora_B": trunc_normal(ks[1], (5, LORA_R, d), LORA_R ** -0.5, dtype),
+        "w0": jnp.zeros((d,), F32),
+        "w_lora_A": trunc_normal(ks[2], (d, 64), std, dtype),
+        "w_lora_B": trunc_normal(ks[3], (64, d), 64 ** -0.5, dtype),
+        "u": jnp.zeros((h, HEAD_SIZE), F32),
+        "wr": trunc_normal(ks[4], (d, d), std, dtype),
+        "wk": trunc_normal(ks[5], (d, d), std, dtype),
+        "wv": trunc_normal(ks[6], (d, d), std, dtype),
+        "wg": trunc_normal(ks[7], (d, d), std, dtype),
+        "wo": trunc_normal(ks[8], (d, d), std_o, dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": trunc_normal(ks[9], (d, d_ff), std, dtype),
+        "cm_wv": trunc_normal(ks[10], (d_ff, d), (d_ff ** -0.5) / math.sqrt(2 * n_layers), dtype),
+        "cm_wr": trunc_normal(ks[11], (d, d), std, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev_tail: jax.Array) -> jax.Array:
+    """x: (B, L, D) -> x_{t-1} with x_prev_tail (B, 1, D) as x_{-1}."""
+    return jnp.concatenate([x_prev_tail, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, xs: jax.Array):
+    """Data-dependent lerp -> the 5 mixed inputs (r, k, v, w, g)."""
+    dx = xs - x
+    base = x + dx * p["mu_base"].astype(F32)
+    lora = jnp.tanh(jnp.einsum("bld,dr->blr", base, p["lora_A"].astype(F32)))
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_R)
+    adj = jnp.einsum("blsr,srd->bsld", lora, p["lora_B"].astype(F32))
+    # mixed: (B, 5, L, D)
+    mixed = x[:, None] + dx[:, None] * (
+        p["mu"].astype(F32)[None, :, None, :] + adj)
+    return [mixed[:, i] for i in range(5)]
+
+
+def _project_rkvwg(p: Params, x: jax.Array, xs: jax.Array):
+    xr, xk, xv, xw, xg = _ddlerp(p, x.astype(F32), xs.astype(F32))
+    r = jnp.einsum("bld,de->ble", xr, p["wr"].astype(F32))
+    k = jnp.einsum("bld,de->ble", xk, p["wk"].astype(F32))
+    v = jnp.einsum("bld,de->ble", xv, p["wv"].astype(F32))
+    g = jnp.einsum("bld,de->ble", xg, p["wg"].astype(F32))
+    logw = -jnp.exp(p["w0"][None, None] + jnp.einsum(
+        "blr,rd->bld", jnp.tanh(jnp.einsum("bld,dr->blr", xw,
+                                           p["w_lora_A"].astype(F32))),
+        p["w_lora_B"].astype(F32)))
+    w = jnp.exp(logw)  # in (0, 1)
+    return r, k, v, g, w, logw
+
+
+def _head_split(t: jax.Array) -> jax.Array:
+    b, l, d = t.shape
+    return t.reshape(b, l, d // HEAD_SIZE, HEAD_SIZE)
+
+
+def rwkv6_timemix_scan(p: Params, x: jax.Array, x_prev_tail: jax.Array,
+                       s0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Baseline: lax.scan over time.  x: (B, L, D); s0: (B, H, N, N)."""
+    xs = _token_shift(x.astype(F32), x_prev_tail.astype(F32))
+    r, k, v, g, w, _ = _project_rkvwg(p, x, xs)
+    r, k, v, w = map(_head_split, (r, k, v, w))
+    u = p["u"]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B, H, N) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, N, N)
+        yt = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, yt
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_fin, y = jax.lax.scan(step, s0, seq)
+    y = jnp.moveaxis(y, 0, 1)                     # (B, L, H, N)
+    return _finish_timemix(p, x, y, g), s_fin
+
+
+def rwkv6_timemix_chunked(p: Params, x: jax.Array, x_prev_tail: jax.Array,
+                          s0: jax.Array, chunk: int = 16
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Optimized: GLA-style chunked matmul form (beyond-paper perf path).
+
+    Numerical safety: every exponent is a *backward* decay segment (<= 0), so
+    no exp() can overflow regardless of how aggressive the learned
+    data-dependent decay gets.  The intra-chunk interaction uses the pairwise
+    decay tensor directly (never the exp(+cum) factoring, which overflows);
+    chunk=16 keeps that tensor small while the inter-chunk state recurrence
+    carries everything longer-range.
+    """
+    b, l, d = x.shape
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xs = _token_shift(x.astype(F32), x_prev_tail.astype(F32))
+    r, k, v, g, w, logw = _project_rkvwg(p, x, xs)
+    r, k, v = map(_head_split, (r, k, v))
+    logw = _head_split(logw)
+    u = p["u"]
+    h = d // HEAD_SIZE
+
+    rc = r.reshape(b, nc, chunk, h, HEAD_SIZE)
+    kc = k.reshape(b, nc, chunk, h, HEAD_SIZE)
+    vc = v.reshape(b, nc, chunk, h, HEAD_SIZE)
+    lw = logw.reshape(b, nc, chunk, h, HEAD_SIZE)
+    cum = jnp.cumsum(lw, 2)                        # decay through step i
+    cum_excl = cum - lw                            # decay before step i
+    r_dec = rc * jnp.exp(cum_excl)                 # <= |rc|: safe
+    k_dec = kc * jnp.exp(cum[:, :, -1:] - cum)     # decay i+1..end: safe
+
+    # intra-chunk scores: sum_n r_i k_j exp(cum_excl_i - cum_j), strict j < i.
+    # exponent = sum of log-decays over (j, i) exclusive: always <= 0.
+    seg = cum_excl[:, :, :, None] - cum[:, :, None, :]     # (b,nc,i,j,h,n)
+    iidx = jnp.arange(chunk)
+    mask = (iidx[:, None] > iidx[None, :])[None, None, :, :, None, None]
+    dec = jnp.exp(jnp.where(mask, seg, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn,bcijhn->bchij", rc, kc, dec)
+    y_intra = jnp.einsum("bchij,bcjhn->bcihn", scores, vc)
+    # u bonus (diagonal, current token)
+    bonus = jnp.einsum("bncho,ho,bncho->bnch", rc, u, kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk states
+    states = jnp.einsum("bncho,bnchv->bnhov", k_dec, vc)  # (B,nc,H,N,N)
+    chunk_decay = jnp.exp(cum[:, :, -1])                  # (B, nc, H, N)
+
+    def step(s, inp):
+        st, dec = inp
+        y_state = s
+        s_next = dec[..., None] * s + st
+        return s_next, y_state
+
+    s_fin, s_prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                   # (B, nc, H, N, N)
+    y_inter = jnp.einsum("bncho,bnhov->bnchv", r_dec, s_prev)
+    y = (y_intra + y_inter).reshape(b, l, h, HEAD_SIZE)
+    return _finish_timemix(p, x, y, g), s_fin
+
+
+def _finish_timemix(p: Params, x: jax.Array, y: jax.Array, g: jax.Array
+                    ) -> jax.Array:
+    """Per-head groupnorm, silu(g) gate, output projection."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)[..., None]
+    b, l = x.shape[0], x.shape[1]
+    y = y.reshape(b, l, -1) * p["ln_x_scale"].astype(F32)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bld,de->ble", y, p["wo"].astype(F32))
+    return out.astype(x.dtype)
+
+
+def rwkv6_channelmix(p: Params, x: jax.Array, x_prev_tail: jax.Array
+                     ) -> jax.Array:
+    xf = x.astype(F32)
+    xs = _token_shift(xf, x_prev_tail.astype(F32))
+    xk = xf + (xs - xf) * p["cm_mu_k"].astype(F32)
+    xr = xf + (xs - xf) * p["cm_mu_r"].astype(F32)
+    k = jnp.einsum("bld,df->blf", xk, p["cm_wk"].astype(F32))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("blf,fd->bld", k, p["cm_wv"].astype(F32))
+    r = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, p["cm_wr"].astype(F32)))
+    return (r * v).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def rwkv6_init_state(bsz: int, d: int, dtype) -> Dict[str, jax.Array]:
+    """Serving state: previous normed inputs for both token shifts + S."""
+    h = d // HEAD_SIZE
+    return {
+        "tm_x": jnp.zeros((bsz, 1, d), dtype),
+        "cm_x": jnp.zeros((bsz, 1, d), dtype),
+        "s": jnp.zeros((bsz, h, HEAD_SIZE, HEAD_SIZE), F32),
+    }

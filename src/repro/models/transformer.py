@@ -1,0 +1,450 @@
+"""Model assembly for every assigned architecture family.
+
+One functional LM with config-driven blocks:
+  dense / moe / vlm / audio : [norm -> GQA attn -> norm -> MLP|MoE] x L
+  hybrid (zamba2)           : groups of `attn_every` Mamba2 blocks followed by
+                              one SHARED attention+MLP block (weight-shared
+                              across all applications), scan-over-groups
+  ssm (rwkv6)               : [norm -> time-mix -> norm -> channel-mix] x L
+
+Layer params are stacked (leading L dim) and consumed by lax.scan so the HLO
+stays compact at 126-layer scale; remat is applied per scanned body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.parallel import ctx
+
+F32 = jnp.float32
+Params = Dict[str, Any]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def attn_spec(cfg: ArchConfig) -> L.AttnSpec:
+    return L.AttnSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                      qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias,
+                      rope_theta=cfg.rope_theta, use_rope=(cfg.pos == "rope"))
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = getattr(jax.checkpoint_policies, cfg.remat_policy, None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan(body, carry, xs, cfg: ArchConfig):
+    """lax.scan, or an unrolled python loop for roofline probes (XLA's
+    cost_analysis counts while-loop bodies once; unrolling makes it exact)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_attn_block(key, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"attn_norm": L.init_norm(k1, cfg.d_model, cfg.norm, dtype),
+         "attn": L.init_attention(k2, attn_spec(cfg), dtype, cfg.n_layers),
+         "mlp_norm": L.init_norm(k3, cfg.d_model, cfg.norm, dtype)}
+    if cfg.moe is not None:
+        k5, k6 = jax.random.split(k4)
+        p["moe"] = MOE.init_moe(k5, cfg.d_model, cfg.moe, dtype, cfg.n_layers)
+        if cfg.moe.dense_residual_ff:
+            p["dense_mlp"] = L.init_mlp(k6, cfg.d_model,
+                                        cfg.moe.dense_residual_ff, cfg.mlp,
+                                        dtype, cfg.n_layers)
+    else:
+        p["mlp"] = L.init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.mlp, dtype,
+                              cfg.n_layers)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    if cfg.embed_inputs:
+        params["embed"] = L.trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                         cfg.d_model ** -0.5, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.trunc_normal(keys[1], (cfg.d_model, cfg.vocab),
+                                           cfg.d_model ** -0.5, dtype)
+    params["final_norm"] = L.init_norm(keys[2], cfg.d_model, cfg.norm, dtype)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_attn_block(k, cfg, dtype))(lkeys)
+    elif cfg.family == "hybrid":
+        n_groups, tail = divmod(cfg.n_layers, cfg.attn_every)
+        gkeys = jax.random.split(keys[3], n_groups * cfg.attn_every)
+
+        def init_mamba_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm": L.init_norm(k1, cfg.d_model, cfg.norm, dtype),
+                    "mamba": M2.init_mamba2(k2, cfg.d_model, cfg.ssm, dtype,
+                                            cfg.n_layers)}
+        grouped = jax.vmap(init_mamba_layer)(gkeys)
+        params["layers"] = jax.tree.map(
+            lambda t: t.reshape(n_groups, cfg.attn_every, *t.shape[1:]), grouped)
+        if tail:
+            tkeys = jax.random.split(keys[4], tail)
+            params["tail_layers"] = jax.vmap(init_mamba_layer)(tkeys)
+        params["shared_attn"] = _init_attn_block(keys[5], cfg, dtype)
+    elif cfg.family == "ssm":
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+
+        def init_rwkv_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": L.init_norm(k1, cfg.d_model, cfg.norm, dtype),
+                    "ln2": L.init_norm(k2, cfg.d_model, cfg.norm, dtype),
+                    "mix": R6.init_rwkv6_layer(k3, cfg.d_model, cfg.d_ff,
+                                               dtype, cfg.n_layers)}
+        params["layers"] = jax.vmap(init_rwkv_layer)(lkeys)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block applications (single layer, full sequence)
+# ---------------------------------------------------------------------------
+def _apply_attn_block(p: Params, x: jax.Array, cfg: ArchConfig
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux_loss)."""
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm)
+    x = x + L.attention_train(p["attn"], h, attn_spec(cfg),
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = L.apply_norm(p["mlp_norm"], x, cfg.norm)
+    aux = jnp.zeros((), F32)
+    if cfg.moe is not None:
+        b, s, d = h.shape
+        y, stats = MOE.moe_ffn(p["moe"], h.reshape(b * s, d), cfg.moe)
+        y = y.reshape(b, s, d)
+        if cfg.moe.dense_residual_ff:
+            y = y + L.apply_mlp(p["dense_mlp"], h, cfg.mlp)
+        aux = stats["lb_loss"]
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg.mlp)
+    return x + y, aux
+
+
+def _apply_mamba_layer(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = L.apply_norm(p["norm"], x, cfg.norm)
+    return x + M2.mamba2_block(p["mamba"], h, cfg.ssm)
+
+
+def _apply_rwkv_layer(p: Params, x: jax.Array, cfg: ArchConfig,
+                      chunked: bool = True) -> jax.Array:
+    b, d = x.shape[0], x.shape[2]
+    tail = jnp.zeros((b, 1, d), x.dtype)
+    s0 = jnp.zeros((b, d // R6.HEAD_SIZE, R6.HEAD_SIZE, R6.HEAD_SIZE), F32)
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    if chunked and x.shape[1] % 64 == 0:
+        y, _ = R6.rwkv6_timemix_chunked(p["mix"], h, tail, s0)
+    else:
+        y, _ = R6.rwkv6_timemix_scan(p["mix"], h, tail, s0)
+    x = x + y
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    return x + R6.rwkv6_channelmix(p["mix"], h, tail)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill-logits)
+# ---------------------------------------------------------------------------
+def embed_inputs(params: Params, cfg: ArchConfig, *, tokens=None, embeds=None
+                 ) -> jax.Array:
+    if cfg.embed_inputs:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    if cfg.pos == "sin":
+        pos = jnp.arange(x.shape[1])
+        x = x + L.sin_embedding(pos, cfg.d_model)[None].astype(x.dtype)
+    return ctx.constrain(x, "residual")
+
+
+def unembed(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=F32)
+    return ctx.constrain(logits, "logits")
+
+
+def forward(params: Params, cfg: ArchConfig, *, tokens=None, embeds=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits fp32 (B,S,V), total moe aux loss)."""
+    x = embed_inputs(params, cfg, tokens=tokens, embeds=embeds)
+    aux_total = jnp.zeros((), F32)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, layer_p):
+            x, aux = carry
+            x = ctx.constrain(x, "residual")
+            x, a = _apply_attn_block(layer_p, x, cfg)
+            return (x, aux + a), None
+        (x, aux_total), _ = _scan(_remat(body, cfg), (x, aux_total),
+                                  params["layers"], cfg)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_p):
+            x, aux = carry
+            x = ctx.constrain(x, "residual")
+
+            def inner(xc, lp):
+                return _apply_mamba_layer(lp, xc, cfg), None
+            x, _ = _scan(inner, x, group_p, cfg)
+            x, a = _apply_attn_block(shared, x, cfg)
+            return (x, aux + a), None
+        (x, aux_total), _ = _scan(_remat(group_body, cfg),
+                                  (x, aux_total), params["layers"], cfg)
+        if "tail_layers" in params:
+            def tail_body(xc, lp):
+                return _apply_mamba_layer(lp, xc, cfg), None
+            x, _ = _scan(_remat(tail_body, cfg), x,
+                         params["tail_layers"], cfg)
+    elif cfg.family == "ssm":
+        def body(xc, layer_p):
+            xc = ctx.constrain(xc, "residual")
+            return _apply_rwkv_layer(layer_p, xc, cfg), None
+        x, _ = _scan(_remat(body, cfg), x, params["layers"], cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    return unembed(params, cfg, x), aux_total
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(F32), -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    loss = nll.mean()
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"ce_loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill (build caches) + decode (one token)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, bsz: int, max_len: int) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    kv = lambda: {"k": jnp.zeros((bsz, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+                  "v": jnp.zeros((bsz, max_len, cfg.n_kv_heads, cfg.d_head), dtype)}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return {"kv": jax.tree.map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), kv())}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        def mstate():
+            return M2.mamba2_init_state(bsz, cfg.d_model, cfg.ssm, dtype)
+        cache = {
+            "mamba": jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t, (n_groups, cfg.attn_every) + t.shape), mstate()),
+            "kv": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n_groups,) + t.shape), kv()),
+        }
+        if tail:
+            cache["mamba_tail"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (tail,) + t.shape), mstate())
+        return cache
+    if cfg.family == "ssm":
+        st = R6.rwkv6_init_state(bsz, cfg.d_model, dtype)
+        return {"rwkv": jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape), st)}
+    raise ValueError(cfg.family)
+
+
+def prefill(params: Params, cfg: ArchConfig, *, tokens=None, embeds=None
+            ) -> Tuple[jax.Array, Params]:
+    """Full-sequence pass that also emits the serving cache.
+
+    Returns (logits (B,S,V), cache).  Cache seq capacity == prompt length;
+    serve/engine.py grows it before decoding.
+    """
+    x = embed_inputs(params, cfg, tokens=tokens, embeds=embeds)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, layer_p):
+            x = ctx.constrain(x, "residual")
+            h = L.apply_norm(layer_p["attn_norm"], x, cfg.norm)
+            y, kv = L.attention_prefill(layer_p["attn"], h, attn_spec(cfg),
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk)
+            x = x + y
+            h = L.apply_norm(layer_p["mlp_norm"], x, cfg.norm)
+            if cfg.moe is not None:
+                b, s, d = h.shape
+                z, _ = MOE.moe_ffn(layer_p["moe"], h.reshape(b * s, d), cfg.moe)
+                z = z.reshape(b, s, d)
+                if cfg.moe.dense_residual_ff:
+                    z = z + L.apply_mlp(layer_p["dense_mlp"], h, cfg.mlp)
+            else:
+                z = L.apply_mlp(layer_p["mlp"], h, cfg.mlp)
+            return x + z, kv
+        x, kvs = _scan(_remat(body, cfg), x, params["layers"], cfg)
+        return unembed(params, cfg, x), {"kv": kvs}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, group_p):
+            def inner(xc, lp):
+                h = L.apply_norm(lp["norm"], xc, cfg.norm)
+                y, st = M2.mamba2_block(lp["mamba"], h, cfg.ssm,
+                                        return_state=True)
+                return xc + y, st
+            x, mstates = _scan(inner, x, group_p, cfg)
+            h = L.apply_norm(shared["attn_norm"], x, cfg.norm)
+            y, kv = L.attention_prefill(shared["attn"], h, attn_spec(cfg),
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk)
+            x = x + y
+            h = L.apply_norm(shared["mlp_norm"], x, cfg.norm)
+            x = x + L.apply_mlp(shared["mlp"], h, cfg.mlp)
+            return x, (mstates, kv)
+        x, (mstates, kvs) = _scan(_remat(group_body, cfg), x,
+                                  params["layers"], cfg)
+        cache = {"mamba": mstates, "kv": kvs}
+        if "tail_layers" in params:
+            def tail_body(xc, lp):
+                h = L.apply_norm(lp["norm"], xc, cfg.norm)
+                y, st = M2.mamba2_block(lp["mamba"], h, cfg.ssm,
+                                        return_state=True)
+                return xc + y, st
+            x, tstates = _scan(_remat(tail_body, cfg), x,
+                               params["tail_layers"], cfg)
+            cache["mamba_tail"] = tstates
+        return unembed(params, cfg, x), cache
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            b, d = x.shape[0], x.shape[2]
+            tail = jnp.zeros((b, 1, d), x.dtype)
+            s0 = jnp.zeros((b, d // R6.HEAD_SIZE, R6.HEAD_SIZE, R6.HEAD_SIZE),
+                           F32)
+            if x.shape[1] % 64 == 0:
+                y, s_fin = R6.rwkv6_timemix_chunked(lp["mix"], h, tail, s0)
+            else:
+                y, s_fin = R6.rwkv6_timemix_scan(lp["mix"], h, tail, s0)
+            x = x + y
+            h2 = L.apply_norm(lp["ln2"], x, cfg.norm)
+            x = x + R6.rwkv6_channelmix(lp["mix"], h2, tail)
+            st = {"tm_x": h[:, -1:], "cm_x": h2[:, -1:], "s": s_fin}
+            return x, st
+        x, states = _scan(_remat(body, cfg), x, params["layers"], cfg)
+        return unembed(params, cfg, x), {"rwkv": states}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                position: jax.Array, *, tokens=None, embeds=None
+                ) -> Tuple[jax.Array, Params]:
+    """One-token decode. tokens: (B, 1); position: (B,) write index.
+    Returns (logits (B, 1, V), new cache)."""
+    if cfg.embed_inputs:
+        x = params["embed"][tokens]
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    if cfg.pos == "sin":
+        x = x + L.sin_embedding(position[:, None], cfg.d_model).astype(x.dtype)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, scanned):
+            layer_p, kv = scanned
+            h = L.apply_norm(layer_p["attn_norm"], x, cfg.norm)
+            y, kv_new = L.attention_decode(layer_p["attn"], h, attn_spec(cfg),
+                                           kv, position)
+            x = x + y
+            h = L.apply_norm(layer_p["mlp_norm"], x, cfg.norm)
+            if cfg.moe is not None:
+                b, s, d = h.shape
+                z, _ = MOE.moe_ffn(layer_p["moe"], h.reshape(b * s, d), cfg.moe,
+                                   capacity_factor=cfg.moe.n_experts
+                                   / cfg.moe.top_k)
+                z = z.reshape(b, s, d)
+                if cfg.moe.dense_residual_ff:
+                    z = z + L.apply_mlp(layer_p["dense_mlp"], h, cfg.mlp)
+            else:
+                z = L.apply_mlp(layer_p["mlp"], h, cfg.mlp)
+            return x + z, kv_new
+        x, kv_new = _scan(body, x, (params["layers"], cache["kv"]), cfg)
+        return unembed(params, cfg, x), {"kv": kv_new}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, scanned):
+            group_p, mstates, kv = scanned
+
+            def inner(xc, sc):
+                lp, st = sc
+                h = L.apply_norm(lp["norm"], xc, cfg.norm)
+                y, st_new = M2.mamba2_step(lp["mamba"], h, st, cfg.ssm)
+                return xc + y, st_new
+            x, mstates_new = _scan(inner, x, (group_p, mstates), cfg)
+            h = L.apply_norm(shared["attn_norm"], x, cfg.norm)
+            y, kv_new = L.attention_decode(shared["attn"], h, attn_spec(cfg),
+                                           kv, position)
+            x = x + y
+            h = L.apply_norm(shared["mlp_norm"], x, cfg.norm)
+            x = x + L.apply_mlp(shared["mlp"], h, cfg.mlp)
+            return x, (mstates_new, kv_new)
+        x, (mnew, kvnew) = _scan(
+            group_body, x, (params["layers"], cache["mamba"], cache["kv"]),
+            cfg)
+        new_cache = {"mamba": mnew, "kv": kvnew}
+        if "tail_layers" in params:
+            def tail_body(xc, sc):
+                lp, st = sc
+                h = L.apply_norm(lp["norm"], xc, cfg.norm)
+                y, st_new = M2.mamba2_step(lp["mamba"], h, st, cfg.ssm)
+                return xc + y, st_new
+            x, tnew = _scan(tail_body, x,
+                            (params["tail_layers"], cache["mamba_tail"]), cfg)
+            new_cache["mamba_tail"] = tnew
+        return unembed(params, cfg, x), new_cache
+
+    if cfg.family == "ssm":
+        def body(x, scanned):
+            lp, st = scanned
+            h = L.apply_norm(lp["ln1"], x, cfg.norm)
+            y, s_new = R6.rwkv6_timemix_scan(lp["mix"], h, st["tm_x"], st["s"])
+            x = x + y
+            h2 = L.apply_norm(lp["ln2"], x, cfg.norm)
+            x = x + R6.rwkv6_channelmix(lp["mix"], h2, st["cm_x"])
+            return x, {"tm_x": h, "cm_x": h2, "s": s_new}
+        x, new_states = _scan(body, x, (params["layers"], cache["rwkv"]), cfg)
+        return unembed(params, cfg, x), {"rwkv": new_states}
+    raise ValueError(cfg.family)

@@ -1,0 +1,108 @@
+"""Activation-sharding context.
+
+Model code stays sharding-agnostic; the launcher installs constraint hooks
+here (Megatron-SP style: residual stream sequence-sharded over 'model',
+projections head-/ff-sharded — GSPMD inserts the all-gather/reduce-scatter
+transitions).  Default is identity so smoke tests and examples run unchanged
+on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _hooks() -> Optional[Dict[str, Callable]]:
+    return getattr(_state, "hooks", None)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """kind in {'residual', 'logits'} (extend as needed)."""
+    hooks = _hooks()
+    if hooks is None or kind not in hooks:
+        return x
+    return hooks[kind](x)
+
+
+@contextlib.contextmanager
+def activation_sharding(hooks: Dict[str, Callable]):
+    prev = _hooks()
+    _state.hooks = hooks
+    try:
+        yield
+    finally:
+        _state.hooks = prev
+
+
+def residual_hooks(mesh, dp: tuple, seq_shard: bool = True,
+                   tp: bool = True) -> Dict[str, Callable]:
+    """Standard hook set: residual (B,S,D) batch+seq sharded; logits vocab-
+    sharded.  tp=False (small-scene grain): 'model' joins the batch axes,
+    no sequence sharding, vocab unsharded."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if not tp:
+        dp = tuple(dp) + ("model",)
+        seq_shard = False
+
+    def res(x):
+        if x.ndim != 3:
+            return x
+        b, s, _ = x.shape
+        bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+        sspec = "model" if (seq_shard and s % mesh.shape["model"] == 0
+                            and s > 1) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(bspec, sspec, None)))
+
+    def logits(x):
+        b = x.shape[0]
+        bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+        v = "model" if (tp and x.shape[-1] % mesh.shape["model"] == 0) \
+            else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(bspec, None, v)))
+
+    def hidden(x):
+        """FFN hidden (B, S, F): F over 'model' — forces Megatron TP so GSPMD
+        never replicates the (d, f) weights per chip (EXPERIMENTS.md §Perf
+        iter 3: without this, XLA gathered full f32 weight copies)."""
+        if not tp or x.ndim != 3 or x.shape[-1] % mesh.shape["model"]:
+            return x
+        b = x.shape[0]
+        bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(bspec, None, "model")))
+
+    def heads(x):
+        """Attention heads (B, S, H, Dh): H over 'model' when divisible."""
+        if not tp or x.ndim != 4 or x.shape[2] % mesh.shape["model"]:
+            return x
+        b = x.shape[0]
+        bspec = dp if (dp and b % _size(mesh, dp) == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(bspec, None, "model", None)))
+
+    def moe_dispatch(x):
+        """Expert buffers (E, C, d|f): E over 'model' (expert parallelism)
+        when divisible — keeps the scatter/expert-GEMM/gather chain sharded
+        (§Perf arctic iter: GSPMD otherwise replicates the (E,C,d) buffers
+        per chip)."""
+        if not tp or x.ndim != 3 or x.shape[0] % mesh.shape["model"]:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P("model", None, None)))
+
+    return {"residual": res, "logits": logits, "hidden": hidden,
+            "heads": heads, "moe_dispatch": moe_dispatch}
+
+
+def _size(mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,229 @@
+"""Sharding rules: FSDP + TP parameter layout, activation constraints, and the
+cluster-scale *multi-grained mapping* choices.
+
+The paper picks a thread-block granularity per convolution scene; this module
+picks a sharding granularity per tensor scene with the same logic:
+
+  * MoE experts:   n_experts >= |model| axis  -> expert-parallel over 'model'
+                   n_experts <  |model| axis  -> TP inside each expert
+  * decode KV:     n_kv_heads >= |model| axis -> head-sharded cache
+                   n_kv_heads <  |model| axis -> sequence-sharded cache
+  * batch:         divisible by the DP axes   -> batch-sharded
+                   (long_500k, B=1)           -> replicated batch, seq-sharded
+                                                  cache
+
+Parameters are laid out Megatron-style (column/row parallel over 'model') and
+fully sharded over 'data' on the other matrix dim (ZeRO-3); optimizer moments
+mirror the parameter specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+
+# Logical param rules: leaf name -> spec for the BASE (unstacked) shape using
+# logical axes: "tp" -> 'model', "fsdp" -> 'data', None -> replicated.
+# Extra leading stack dims (scan layers / groups) are prepended as None.
+_BASE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("tp", "fsdp"),          # vocab-parallel embedding
+    "lm_head": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "q_norm": (None,), "k_norm": (None,),
+    # dense MLP
+    "w_up": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # MoE (overridden per-arch by the multi-grained rule below)
+    "router": ("fsdp", None),
+    # mamba2
+    "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "norm_scale": ("fsdp",),
+    # rwkv6
+    "wr": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+    "cm_wk": ("fsdp", "tp"), "cm_wv": ("tp", "fsdp"), "cm_wr": ("fsdp", "tp"),
+    "lora_A": ("fsdp", None), "lora_B": (None, None, "fsdp"),
+    "w_lora_A": ("fsdp", None), "w_lora_B": (None, "fsdp"),
+    "mu": (None, None), "mu_base": (None,), "w0": (None,), "u": (None, None),
+    "ln_x_scale": (None,), "cm_mu_k": (None,), "cm_mu_r": (None,),
+    # norms (stacked over layers these reach multi-MB: FSDP them too)
+    "scale": ("fsdp",), "bias": ("fsdp",),
+}
+
+_MOE_EP_RULES = {  # experts >= model axis: expert parallelism
+    "w_up": ("tp", None, "fsdp"), "w_gate": ("tp", None, "fsdp"),
+    "w_down": ("tp", "fsdp", None),
+}
+_MOE_TP_RULES = {  # experts < model axis: TP inside each expert
+    "w_up": (None, "fsdp", "tp"), "w_gate": (None, "fsdp", "tp"),
+    "w_down": (None, "tp", "fsdp"),
+}
+
+
+def _logical_to_mesh(axis: Optional[str], mesh, tp: bool = True
+                     ) -> Optional[object]:
+    """fsdp spans every DP axis (incl. 'pod' in multi-pod mode: pod-axis
+    FSDP is what brings llama3-405b params+opt under 16 GB/chip).
+
+    tp=False is the *small-scene grain* (paper Fig. 14 at cluster scale):
+    the 'model' axis stops being tensor-parallel and joins the data axes —
+    params replicated over it logically but ZeRO-3 sharded over everything,
+    batch sharded 256-way.  Selected by StepPlan for small-d_model trains,
+    where TP-16 sequence-parallel all-gathers would dominate the step."""
+    if axis == "tp":
+        return "model" if tp else None
+    if axis == "fsdp":
+        dp = dp_axes(mesh) + (() if tp else ("model",))
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def param_pspecs(cfg: ArchConfig, params: Any, mesh, tp: bool = True) -> Any:
+    """PartitionSpec pytree mirroring `params` (works on shapes or arrays)."""
+    msize = model_axis_size(mesh)
+    moe_ep = cfg.moe is not None and cfg.moe.n_experts >= msize
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        in_moe = "moe" in names
+        rules = _BASE_RULES
+        if in_moe and name in ("w_up", "w_gate", "w_down"):
+            rules = _MOE_EP_RULES if moe_ep else _MOE_TP_RULES
+        base = rules.get(name)
+        if base is None:
+            return P()
+        ndim = len(leaf.shape)
+        extra = ndim - len(base)
+        assert extra >= 0, (names, leaf.shape, base)
+        full = (None,) * extra + tuple(_logical_to_mesh(a, mesh, tp)
+                                       for a in base)
+
+        # Drop sharding on dims the mesh can't divide cleanly (e.g. rwkv 'u'
+        # heads) — GSPMD would reject or pad them wastefully.
+        def ok(i, ax):
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            return leaf.shape[i] % size == 0
+        full = tuple(a if a is None or ok(i, a) else None
+                     for i, a in enumerate(full))
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_pspecs(cfg: ArchConfig, shape_name: str, mesh,
+                 tp: bool = True) -> Dict[str, P]:
+    """Input specs for one (arch x shape) cell."""
+    spec = SHAPES[shape_name]
+    b = spec["global_batch"]
+    dp = dp_axes(mesh) + (() if tp else ("model",))
+    sz = int(np.prod([mesh.shape[a] for a in dp]))
+    bshard = dp if b % sz == 0 else ()
+    bspec = P(bshard if bshard else None)
+    out: Dict[str, P] = {}
+    kind = spec["kind"]
+    if kind == "train":
+        tok = P(bshard if bshard else None, None)
+        if cfg.embed_inputs:
+            out["tokens"] = tok
+        else:
+            out["embeds"] = P(bshard if bshard else None, None, None)
+        out["labels"] = tok
+    elif kind == "prefill":
+        if cfg.embed_inputs:
+            out["tokens"] = P(bshard if bshard else None, None)
+        else:
+            out["embeds"] = P(bshard if bshard else None, None, None)
+    else:  # decode
+        if cfg.embed_inputs:
+            out["tokens"] = P(bshard if bshard else None, None)
+        else:
+            out["embeds"] = P(bshard if bshard else None, None, None)
+        out["position"] = bspec
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, shape_name: str, mesh) -> Any:
+    """Multi-grained KV/state cache sharding for decode cells."""
+    spec = SHAPES[shape_name]
+    b = spec["global_batch"]
+    dp = dp_axes(mesh)
+    bs = dp if b % dp_size(mesh) == 0 else None
+    msize = model_axis_size(mesh)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio") or cfg.family == "hybrid":
+        if cfg.n_kv_heads >= msize and cfg.n_kv_heads % msize == 0:
+            # head-sharded; with an unshardable batch (long_500k B=1) the
+            # seq dim additionally takes 'data'
+            kv = P(None, bs, None if bs else "data", "model", None)
+        else:
+            kv = P(None, bs, "model" if bs else ("data", "model"), None,
+                   None)  # sequence-sharded
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return {"kv": {"k": kv, "v": kv}}
+    if cfg.family == "hybrid":
+        kv = P(*(kv))  # same rule, leading dim is the group index
+        mamba = {
+            "conv": P(None, None, bs, None, "model"),
+            "ssm": P(None, None, bs, "model", None, None),
+        }
+        out = {"kv": {"k": kv, "v": kv}, "mamba": mamba}
+        if cfg.n_layers % cfg.attn_every:
+            out["mamba_tail"] = {
+                "conv": P(None, bs, None, "model"),
+                "ssm": P(None, bs, "model", None, None),
+            }
+        return out
+    if cfg.family == "ssm":
+        return {"rwkv": {
+            "tm_x": P(None, bs, None, None),
+            "cm_x": P(None, bs, None, None),
+            "s": P(None, bs, "model", None, None),
+        }}
+    raise ValueError(cfg.family)
+
+
+def sanitize_pspecs(spec_tree: Any, shape_tree: Any, mesh) -> Any:
+    """Drop spec axes that don't divide the corresponding dim (GSPMD would
+    either reject them as pjit argument shardings or pad wastefully)."""
+    def fix(spec: P, leaf) -> P:
+        dims = tuple(leaf.shape)
+        out = []
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(dims) - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(ax if dims[i] % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(
+        lambda s, l: fix(s, l), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,109 @@
+"""Batched serving engine: continuous batching over a fixed-capacity slot
+pool, prefill + decode steps, greedy/temperature sampling.
+
+Small-scale runnable on CPU (examples/serve_lm.py); the same step functions
+are what the dry-run lowers under the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    temperature: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching.
+
+    Capacity = `slots` concurrent sequences with a shared max_len KV budget.
+    Each engine step decodes one token for every active slot; finished slots
+    are refilled from the queue (prefill) before the next decode.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int, max_len: int,
+                 seed: int = 0):
+        assert cfg.embed_inputs, "serving engine drives token models"
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.cache = T.init_cache(cfg, slots, max_len)
+        self.position = jnp.zeros((slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: T.decode_step(p, cfg, c, pos, tokens=tok))
+        self.last_token = np.zeros((slots,), np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Prefill prompt[:-1] into the cache; the final prompt token is
+        consumed by the first decode step (whose logits produce out[0]).
+
+        Slot-wise prefill keeps the cache layout identical to decode; batch
+        prefill via T.prefill is used by the bulk path / dry-run."""
+        pos = 0
+        cache = self.cache
+        for tok in req.prompt[:-1]:
+            toks = np.copy(self.last_token)[:, None]
+            toks[slot, 0] = tok
+            posv = np.array(self.position)
+            posv[slot] = pos
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(posv))
+            pos += 1
+        self.cache = cache
+        self.position = self.position.at[slot].set(pos)
+        self.active[slot] = req
+        self.last_token[slot] = req.prompt[-1]
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    def step(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        # fill empty slots
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self._prefill_into_slot(slot, self.queue.pop(0))
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_token)[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          self.position)
+        for slot in live:
+            req = self.active[slot]
+            nxt = self._sample(logits[slot, -1], req.temperature)
+            req.out.append(nxt)
+            self.last_token[slot] = nxt
+            self.position = self.position.at[slot].add(1)
+            if len(req.out) >= req.max_new or \
+                    int(self.position[slot]) >= self.max_len:
+                req.done = True
+                self.active[slot] = None
+        return len(live)
+
+    def run(self) -> None:
+        while self.queue or any(a is not None for a in self.active):
+            self.step()

@@ -1,0 +1,118 @@
+"""Fault tolerance: straggler detection, failure-aware training loop, elastic
+re-mesh.
+
+On a real multi-pod deployment these hooks sit on top of the JAX distributed
+runtime; everything here is runtime-agnostic logic that we exercise in tests
+by *simulating* failures and stragglers (this container is one CPU).
+
+Components:
+  * StragglerMonitor — per-step wall-time EWMA + outlier flagging; at scale
+    this runs per-host and feeds the scheduler's replace-node decision.
+  * run_with_restarts — crash/restart driver: a training loop that resumes
+    from the latest atomic checkpoint after a (simulated or real) failure,
+    bit-exactly (data cursor + RNG live in the checkpoint).
+  * elastic_restore — reload a checkpoint onto a *different* mesh shape
+    (node count changed): re-shards every leaf under the new specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than `threshold` x EWMA.
+
+    At 1000+ node scale the same statistic is computed per host from the
+    barrier-arrival times; a persistently-flagged host is drained and its
+    shard re-dispatched (see DESIGN.md)."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup: int = 3
+    _ewma: Optional[float] = None
+    _n: int = 0
+    flagged: List[int] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self._n += 1
+        if self._ewma is None:
+            self._ewma = dt
+            return False
+        is_straggler = (self._n > self.warmup
+                        and dt > self.threshold * self._ewma)
+        if is_straggler:
+            self.flagged.append(step)
+        else:
+            # stragglers don't poison the baseline
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * dt
+        return is_straggler
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def run_with_restarts(*, make_state: Callable[[], Any],
+                      train_step: Callable[[Any, Any], tuple],
+                      data_source, n_steps: int, ckpt_dir: str,
+                      ckpt_every: int = 10,
+                      fail_at: Optional[Dict[int, int]] = None,
+                      max_restarts: int = 10,
+                      state_specs=None, mesh=None) -> Dict[str, Any]:
+    """Failure-aware training driver.
+
+    fail_at: {attempt_index: step} — raise SimulatedFailure at `step` during
+    that attempt (test hook).  Real deployments hit the same code path via
+    actual exceptions from the runtime.
+    Returns final state + telemetry.
+    """
+    fail_at = fail_at or {}
+    attempt = 0
+    monitor = StragglerMonitor()
+    losses: Dict[int, float] = {}
+    restarts = 0
+
+    while True:
+        # --- (re)initialize from the latest checkpoint, if any
+        state = make_state()
+        start = 0
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            state, extra = ckpt.restore(ckpt_dir, last, state, mesh=mesh,
+                                        specs=state_specs)
+            start = extra["next_step"]
+        try:
+            for step in range(start, n_steps):
+                if fail_at.get(attempt) == step:
+                    attempt += 1
+                    raise SimulatedFailure(f"injected at step {step}")
+                batch = data_source.batch_at(step)
+                t0 = time.time()
+                state, metrics = train_step(state, batch)
+                monitor.record(step, time.time() - t0)
+                losses[step] = float(metrics["loss"])
+                if (step + 1) % ckpt_every == 0 or step + 1 == n_steps:
+                    ckpt.save(ckpt_dir, step + 1, state,
+                              extra={"next_step": step + 1})
+                    ckpt.retain(ckpt_dir, keep=3)
+            return {"state": state, "losses": losses, "restarts": restarts,
+                    "stragglers": monitor.flagged}
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+
+
+def elastic_restore(ckpt_dir: str, step: int, like: Any, new_mesh,
+                    new_specs) -> Any:
+    """Restore a checkpoint onto a different mesh (elastic scaling)."""
+    state, _ = ckpt.restore(ckpt_dir, step, like, mesh=new_mesh,
+                            specs=new_specs)
+    return state

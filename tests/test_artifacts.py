@@ -1,0 +1,97 @@
+"""Integration checks over the dry-run/roofline artifact sweep (results/).
+
+These validate the *deliverable*: every (arch x shape) cell has single-pod
+AND multi-pod dry-run artifacts (compiled OK or an explicitly-reasoned skip),
+and the roofline numbers are internally consistent.  Skipped gracefully if
+the sweep hasn't been run in this checkout.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ALIASES, get_config
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "dryrun_*_sp.json")),
+    reason="dry-run sweep artifacts not present (run scripts/sweep.sh)")
+
+
+def _cells():
+    return [(a, s) for a in sorted(ALIASES) for s in sorted(SHAPES)]
+
+
+def _fid(arch: str) -> str:
+    """scripts/sweep.sh sanitizes '.' -> 'p' in filenames."""
+    return arch.replace(".", "p")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mesh", ["sp", "mp"])
+def test_every_cell_has_dryrun_artifact(mesh):
+    missing, bad = [], []
+    for arch, shape in _cells():
+        d = _load(f"dryrun_{_fid(arch)}_{shape}_{mesh}.json")
+        if d is None:
+            missing.append((arch, shape))
+        elif d["status"] == "skipped":
+            cfg = get_config(arch)
+            assert shape == "long_500k" and not cfg.sub_quadratic, \
+                f"unexpected skip {arch} {shape}"
+        elif d["status"] != "ok":
+            bad.append((arch, shape, d["status"]))
+    assert not missing, f"missing dryrun artifacts: {missing}"
+    assert not bad, f"failed dryrun cells: {bad}"
+
+
+def test_long500k_skips_match_design():
+    """Exactly the 8 pure full-attention archs skip long_500k."""
+    skipped = []
+    for arch in sorted(ALIASES):
+        d = _load(f"dryrun_{_fid(arch)}_long_500k_sp.json")
+        if d and d["status"] == "skipped":
+            skipped.append(arch)
+    runners = [a for a in sorted(ALIASES) if get_config(a).sub_quadratic]
+    assert sorted(skipped) == sorted(set(ALIASES) - set(runners))
+    assert sorted(runners) == ["rwkv6-3b", "zamba2-7b"]
+
+
+def test_roofline_terms_consistent():
+    for f in glob.glob(os.path.join(RESULTS, "roofline_*.json")):
+        d = json.load(open(f))
+        if d["status"] != "ok":
+            continue
+        t = d["terms_s"]
+        # terms derive from per-chip counters with the stated constants
+        assert abs(t["compute"] - d["per_chip"]["flops"] / 197e12) < 1e-6
+        assert abs(t["memory"] - d["per_chip"]["bytes"] / 819e9) < 1e-6
+        bound = max(t.values())
+        if bound > 0 and d["roofline_fraction"] is not None:
+            assert 0 <= d["roofline_fraction"] <= 1.05, (f, d["roofline_fraction"])
+        assert d["dominant"] == max(t, key=t.get)
+
+
+def test_memory_budget_flags():
+    """Per-chip state must fit 16 GB on at least one mesh for every cell
+    (the multi-pod mesh exists exactly for the 405B-class models)."""
+    for arch, shape in _cells():
+        sp = _load(f"dryrun_{_fid(arch)}_{shape}_sp.json")
+        mp = _load(f"dryrun_{_fid(arch)}_{shape}_mp.json")
+        if not sp or sp["status"] != "ok":
+            continue
+        fits = []
+        for d in (sp, mp):
+            if d and d["status"] == "ok":
+                fits.append(d["memory"]["argument_bytes"] <= 16 * 2 ** 30)
+        assert any(fits), (arch, shape, "state exceeds 16GB/chip on both meshes")

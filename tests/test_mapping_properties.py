@@ -1,0 +1,80 @@
+"""Hypothesis property tests on the multi-grained selector's invariants."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.mapping import (VMEM_BUDGET, _vmem_bytes, granularity_map,
+                                predicted_efficiency, select_schedule)
+from repro.core.scene import ConvScene
+
+@st.composite
+def scenes(draw):
+    inH = draw(st.integers(3, 32))
+    inW = draw(st.integers(3, 32))
+    padH = draw(st.integers(0, 2))
+    padW = draw(st.integers(0, 2))
+    fltH = draw(st.integers(1, min(5, inH + 2 * padH)))
+    fltW = draw(st.integers(1, min(5, inW + 2 * padW)))
+    return ConvScene(
+        B=draw(st.integers(1, 512)),
+        IC=draw(st.integers(1, 1024)),
+        OC=draw(st.integers(1, 1024)),
+        inH=inH, inW=inW, fltH=fltH, fltW=fltW, padH=padH, padW=padW,
+        stdH=draw(st.integers(1, 2)), stdW=draw(st.integers(1, 2)))
+
+
+scene_st = scenes()
+
+
+@settings(max_examples=200, deadline=None)
+@given(scene_st)
+def test_selector_always_feasible(scene):
+    """Every valid scene gets a schedule whose blocks fit the VMEM budget."""
+    choice = select_schedule(scene)
+    assert choice.schedule in ("TB11", "TB18", "TB88")
+    assert choice.predicted_s > 0
+    assert _vmem_bytes(scene, choice.schedule, choice.bm, choice.bn,
+                       choice.bk) <= VMEM_BUDGET
+
+
+@settings(max_examples=200, deadline=None)
+@given(scene_st)
+def test_selected_is_argmin(scene):
+    """The multi-grained choice is never worse than any single forced grain
+    (Table 2's claim, as an invariant)."""
+    best = select_schedule(scene)
+    for forced in ("TB11", "TB18", "TB88"):
+        try:
+            single = select_schedule(scene, allowed=(forced,))
+        except ValueError:
+            continue
+        assert best.predicted_s <= single.predicted_s * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(scene_st)
+def test_efficiency_bounded(scene):
+    choice = select_schedule(scene)
+    eff = predicted_efficiency(scene, choice)
+    assert 0.0 < eff <= 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_flops_count_positive_and_symmetric(ic, oc):
+    a = ConvScene(B=8, IC=ic, OC=oc, inH=8, inW=8, fltH=3, fltW=3,
+                  padH=1, padW=1)
+    b = ConvScene(B=8, IC=oc, OC=ic, inH=8, inW=8, fltH=3, fltW=3,
+                  padH=1, padW=1)
+    assert a.flops == b.flops > 0
+
+
+def test_granularity_monotone_trend():
+    """Paper Fig. 14: grain should (weakly) grow with scene size."""
+    order = {"TB11": 0, "TB18": 1, "TB88": 2}
+    gmap = granularity_map([64, 256], [16, 128, 1024])
+    small = order[gmap[(64, 16, 16)]]
+    big = order[gmap[(256, 1024, 1024)]]
+    assert small <= big
+    assert small == 0          # tiny scene must use the finest grain
+    assert big >= 1            # huge scene must use a coarser grain

@@ -1,0 +1,89 @@
+"""MoE routing invariants (unit + hypothesis property tests)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as MOE
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(t=64, d=32, e=8, k=2, cf=1.25):
+    cfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=16, capacity_factor=cf)
+    p = MOE.init_moe(KEY, d, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    return cfg, p, x
+
+
+def test_route_topk_gates_normalized():
+    logits = jax.random.normal(KEY, (100, 8))
+    gates, idx = MOE.route_topk(logits, 2)
+    np.testing.assert_allclose(gates.sum(-1), 1.0, rtol=1e-5)
+    assert (idx >= 0).all() and (idx < 8).all()
+    # top-1 gate >= top-2 gate
+    assert (gates[:, 0] >= gates[:, 1] - 1e-6).all()
+
+
+def test_moe_output_shape_and_finite():
+    cfg, p, x = _setup()
+    y, aux = MOE.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["lb_loss"]) > 0
+
+
+def test_no_drop_capacity_processes_every_token():
+    """capacity_factor = E/k  =>  capacity == T  => nothing dropped."""
+    cfg, p, x = _setup(cf=4.0)  # 8 experts / top-2
+    _, aux = MOE.moe_ffn(p, x, cfg, capacity_factor=cfg.n_experts / cfg.top_k)
+    assert float(aux["drop_frac"]) == 0.0
+
+
+def test_tiny_capacity_drops_tokens():
+    cfg, p, x = _setup(cf=0.1)
+    _, aux = MOE.moe_ffn(p, x, cfg)
+    assert float(aux["drop_frac"]) > 0.0
+
+
+def test_moe_permutation_equivariance_no_drop():
+    """With drop-free capacity, permuting tokens permutes outputs."""
+    cfg, p, x = _setup()
+    perm = jax.random.permutation(jax.random.PRNGKey(2), x.shape[0])
+    y1, _ = MOE.moe_ffn(p, x, cfg, capacity_factor=cfg.n_experts / cfg.top_k)
+    y2, _ = MOE.moe_ffn(p, x[perm], cfg,
+                        capacity_factor=cfg.n_experts / cfg.top_k)
+    np.testing.assert_allclose(y2, y1[perm], rtol=2e-4, atol=2e-4)
+
+
+def test_moe_matches_dense_reference():
+    """Scatter-dispatch output == direct per-token expert evaluation."""
+    cfg, p, x = _setup(t=32, e=4)
+    y, _ = MOE.moe_ffn(p, x, cfg, capacity_factor=cfg.n_experts / cfg.top_k)
+    logits = x @ p["router"]
+    gates, idx = MOE.route_topk(logits, cfg.top_k)
+    want = np.zeros_like(np.asarray(x))
+    for t in range(x.shape[0]):
+        for slot in range(cfg.top_k):
+            e = int(idx[t, slot])
+            h = jax.nn.silu(x[t] @ p["w_gate"][e]) * (x[t] @ p["w_up"][e])
+            want[t] += float(gates[t, slot]) * np.asarray(h @ p["w_down"][e])
+    np.testing.assert_allclose(y, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 128), st.integers(2, 16), st.integers(1, 2))
+def test_capacity_never_exceeded(t, e, k):
+    k = min(k, e)
+    logits = jax.random.normal(jax.random.PRNGKey(t * e + k), (t, e))
+    gates, idx = MOE.route_topk(logits, k)
+    capacity = max(1, int(1.25 * t * k / e))
+    flat = np.asarray(idx).reshape(-1)
+    onehot = np.eye(e, dtype=np.int64)[flat]
+    pos = onehot.cumsum(0) - 1
+    mypos = pos[np.arange(len(flat)), flat]
+    kept = (mypos < capacity)
+    per_expert = np.bincount(flat[kept], minlength=e)
+    assert per_expert.max() <= capacity

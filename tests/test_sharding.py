@@ -1,0 +1,134 @@
+"""Sharding-rule unit tests: param layouts, multi-grained choices, sanitize.
+
+These run on the host (1 device) — they test the *specs*, not the compile
+(the dry-run sweep covers compilation on the production meshes).
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, reduced
+from repro.models import transformer as T
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by the rule code."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+SP = FakeMesh({"data": 16, "model": 16})
+MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _params(arch):
+    cfg = reduced(get_config(arch))
+    return cfg, jax.eval_shape(lambda k: T.init_params(get_config(arch), k),
+                               jax.random.PRNGKey(0))
+
+
+def test_dense_param_rules_single_pod():
+    cfg, params = _params("llama3-405b")
+    specs = sh.param_pspecs(get_config("llama3-405b"), params, SP)
+    layers = specs["layers"]
+    # stacked layer dim is unsharded; matrix dims follow Megatron+FSDP
+    assert layers["attn"]["wq"] == P(None, "data", "model")
+    assert layers["attn"]["wo"] == P(None, "model", "data")
+    assert layers["mlp"]["w_up"] == P(None, "data", "model")
+    assert layers["mlp"]["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", "data")
+    assert layers["attn_norm"]["scale"] == P(None, "data")
+
+
+def test_multipod_fsdp_spans_pod():
+    cfg = get_config("llama3-405b")
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = sh.param_pspecs(cfg, params, MP)
+    assert specs["layers"]["attn"]["wq"] == P(None, ("pod", "data"), "model")
+
+
+def test_moe_grain_ep_vs_tp():
+    """The multi-grained MoE rule: arctic (128e) EP, grok (8e) TP-in-expert."""
+    arctic = get_config("arctic-480b")
+    pa = jax.eval_shape(lambda k: T.init_params(arctic, k),
+                        jax.random.PRNGKey(0))
+    sa = sh.param_pspecs(arctic, pa, SP)
+    assert sa["layers"]["moe"]["w_up"] == P(None, "model", None, "data")
+
+    grok = get_config("grok-1-314b")
+    pg = jax.eval_shape(lambda k: T.init_params(grok, k), jax.random.PRNGKey(0))
+    sg = sh.param_pspecs(grok, pg, SP)
+    assert sg["layers"]["moe"]["w_up"] == P(None, None, "data", "model")
+
+
+def test_kv_cache_grain_head_vs_seq():
+    """kv_heads >= |model| -> head-sharded; < -> sequence-sharded."""
+    musicgen = get_config("musicgen-large")       # kv=32 >= 16
+    spec = sh.cache_pspecs(musicgen, "decode_32k", SP)
+    assert spec["kv"]["k"] == P(None, ("data",), None, "model", None)
+
+    llama = get_config("llama3-405b")             # kv=8 < 16
+    spec = sh.cache_pspecs(llama, "decode_32k", SP)
+    assert spec["kv"]["k"] == P(None, ("data",), "model", None, None)
+
+
+def test_long500k_batch1_replicated_batch():
+    zamba = get_config("zamba2-7b")     # kv=32: head-sharded family
+    spec = sh.cache_pspecs(zamba, "long_500k", SP)
+    # batch 1: unsharded batch; cache seq takes 'data', heads take 'model'
+    assert spec["kv"]["k"][1] is None
+    assert spec["kv"]["k"][2] == "data"
+    assert spec["kv"]["k"][3] == "model"
+
+
+def test_sanitize_drops_indivisible():
+    spec = {"a": P("model", None)}
+    shapes = {"a": jax.ShapeDtypeStruct((40, 8), jax.numpy.float32)}
+    fixed = sh.sanitize_pspecs(spec, shapes, SP)
+    assert fixed["a"] == P(None, None)            # 40 % 16 != 0
+    shapes2 = {"a": jax.ShapeDtypeStruct((32, 8), jax.numpy.float32)}
+    fixed2 = sh.sanitize_pspecs(spec, shapes2, SP)
+    assert fixed2["a"] == P("model", None)
+
+
+def test_batch_specs_tp_grain():
+    cfg = get_config("qwen2.5-3b")
+    tp_on = sh.batch_pspecs(cfg, "train_4k", SP, tp=True)
+    tp_off = sh.batch_pspecs(cfg, "train_4k", SP, tp=False)
+    assert tp_on["tokens"] == P(("data",), None)
+    assert tp_off["tokens"] == P(("data", "model"), None)
+
+
+def test_default_plan_grain_selection():
+    """Small-d_model trains pick the DP grain (the paper's small-scene rule
+    at cluster scale); big models keep TP."""
+    from repro.train.step import default_plan
+    assert default_plan(get_config("qwen2.5-3b"), "train_4k", SP).tp is False
+    assert default_plan(get_config("llama3-405b"), "train_4k", SP).tp is True
+    # serving always keeps the model axis
+    assert default_plan(get_config("qwen2.5-3b"), "decode_32k", SP).tp is True
+
+
+def test_param_specs_cover_every_leaf():
+    """No param leaf falls through the rule table silently sharded wrong."""
+    for arch in ("llama3-405b", "arctic-480b", "zamba2-7b", "rwkv6-3b",
+                 "musicgen-large"):
+        cfg = get_config(arch)
+        params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        specs = sh.param_pspecs(cfg, params, SP)
+        n_leaves = len(jax.tree.leaves(params))
+        n_specs = len(jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_leaves == n_specs
+        # every big matrix (>= 1M elements) must be sharded on >= 1 dim
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(params)[0],
+                jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+            if np.prod(leaf.shape) >= 1 << 20:
+                assert any(a is not None for a in spec), \
+                    (arch, jax.tree_util.keystr(path), leaf.shape, spec)
