@@ -5,7 +5,8 @@ import argparse
 import json
 import os
 
-from benchmarks import batch, channels, cnns, filters, granularity, padstride
+from benchmarks import (batch, channels, cnns, filters, granularity,
+                        padstride, tuned)
 from benchmarks.common import emit
 
 
@@ -32,12 +33,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
-                         "padstride,cnns,granularity,roofline")
+                         "padstride,cnns,granularity,roofline,tuned")
     args = ap.parse_args()
     mods = {"channels": channels.rows, "batch": batch.rows,
             "filters": filters.rows, "padstride": padstride.rows,
             "cnns": cnns.rows, "granularity": granularity.rows,
-            "roofline": roofline_rows}
+            "roofline": roofline_rows, "tuned": tuned.rows}
     only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
     for name in only:

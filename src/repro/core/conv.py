@@ -1,17 +1,17 @@
 """Public MG3MConv API — the paper's contribution as a composable JAX module."""
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.mapping import ScheduleChoice, predicted_efficiency, select_schedule
 from repro.core.scene import ConvScene
 from repro.kernels import ops, ref
+from repro.kernels.ops import ScheduleSpec
 
-__all__ = ["ConvScene", "ScheduleChoice", "select_schedule", "mg3m_conv",
-           "mg3m_conv_nhwc", "mg3m_conv_trainable", "predicted_efficiency"]
+__all__ = ["ConvScene", "ScheduleChoice", "ScheduleSpec", "select_schedule",
+           "mg3m_conv", "mg3m_conv_nhwc", "mg3m_conv_trainable",
+           "predicted_efficiency"]
 
 
 def __getattr__(name):
@@ -22,15 +22,19 @@ def __getattr__(name):
 
 
 def mg3m_conv(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
-              schedule: Optional[str] = None, interpret: bool = True,
+              schedule: ScheduleSpec = None, interpret: bool = True,
               use_pallas: bool = True) -> jax.Array:
-    """Convolution in the paper's layouts IN[H,W,IC,B], FLT[h,w,IC,OC]."""
+    """Convolution in the paper's layouts IN[H,W,IC,B], FLT[h,w,IC,OC].
+
+    ``schedule`` accepts None (analytic selection), "auto" (tuned-cache
+    resolution with analytic fallback), a forced "TB11"/"TB18"/"TB88", or an
+    exact ScheduleChoice."""
     return ops.mg3m_conv_op(inp, flt, scene, schedule=schedule,
                             interpret=interpret, use_pallas=use_pallas)
 
 
 def mg3m_conv_nhwc(x: jax.Array, flt: jax.Array, *, stride=(1, 1),
-                   padding=(0, 0), schedule: Optional[str] = None,
+                   padding=(0, 0), schedule: ScheduleSpec = None,
                    interpret: bool = True, use_pallas: bool = True) -> jax.Array:
     """Framework-friendly NHWC entry point (x: [B,H,W,C], flt: [h,w,IC,OC]).
 

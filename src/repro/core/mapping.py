@@ -154,25 +154,14 @@ def _score(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int
 
 
 def candidate_blocks(scene: ConvScene, schedule: str) -> Tuple[Tuple[int, int, int], ...]:
-    """Hardware-aligned (bm, bn, bk) candidates per schedule."""
-    m, n, k = scene.M, scene.N, scene.K
-    if schedule == "TB11":
-        return ((m, n, k),)
-    if schedule == "TB18":
-        cands = []
-        for bm in (64, 128, 256, 512):
-            if bm < m:
-                cands.append((bm, n, k))
-        cands.append((round_up(m, SUBLANE), n, k))
-        return tuple(dict.fromkeys(cands))
-    cands = []
-    for bm in (128, 256, 512):
-        for bn in (128, 256, 512):
-            for bk in (128, 256, 512):
-                cands.append((min(bm, round_up(m, SUBLANE)),
-                              min(bn, round_up(n, LANE)),
-                              min(bk, round_up(k, SUBLANE))))
-    return tuple(dict.fromkeys(cands))
+    """Hardware-aligned (bm, bn, bk) candidates per schedule.
+
+    The enumeration lives in ``repro.tune.space`` (the autotuner's search
+    space); the analytic selector prunes the same space, so a tuned cache
+    entry is always a point the analytic path could also have chosen.
+    """
+    from repro.tune.space import block_candidates  # local: avoids import cycle
+    return block_candidates(scene, schedule)
 
 
 def select_schedule(scene: ConvScene,

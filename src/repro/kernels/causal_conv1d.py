@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import TPUCompilerParams
+
 
 def _kernel(x_ref, prev_ref, w_ref, out_ref, *, kw: int, block_l: int):
     li = pl.program_id(1)
@@ -54,7 +56,7 @@ def causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int,
         out_specs=pl.BlockSpec((1, block_l, block_d),
                                lambda bi, li, di: (bi, li, di)),
         out_shape=jax.ShapeDtypeStruct((b, l, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary", "parallel")),
         interpret=interpret,
     )(x, x, w)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import TPUCompilerParams
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -99,7 +101,7 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bq,), F32), pltpu.VMEM((bq,), F32),
                         pltpu.VMEM((bq, d), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

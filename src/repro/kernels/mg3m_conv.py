@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import TPUCompilerParams
+
 from repro.core.scene import ConvScene, ceil_div
 
 
@@ -85,7 +87,7 @@ def conv_tb11(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
         out_specs=pl.BlockSpec((1, 1, m, n), lambda oh, ow, i, j: (oh, ow, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
         scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(inp, flt)
@@ -132,7 +134,7 @@ def conv_tb18(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
                                lambda mm, oh, ow, i, j: (oh, ow, mm, 0)),
         out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary", "arbitrary")),
         interpret=interpret,
@@ -184,7 +186,7 @@ def conv_tb88(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
                                lambda oh, ow, mm, nn, i, j, kk: (oh, ow, mm, nn)),
         out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "parallel",
                                  "arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,

@@ -10,7 +10,7 @@ Responsibilities (the paper's "CG-level" housekeeping, §4.1):
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Union
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from repro.core.mapping import ScheduleChoice, select_schedule
 from repro.core.scene import ConvScene, round_up
 from repro.kernels import mg3m_conv, ref
+
+ScheduleSpec = Union[None, str, ScheduleChoice]
 
 
 def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
@@ -55,15 +57,37 @@ def _mg3m_conv_impl(inp: jax.Array, flt: jax.Array, scene: ConvScene,
     return out
 
 
+def resolve_choice(scene: ConvScene, schedule: ScheduleSpec,
+                   interpret: bool = True) -> ScheduleChoice:
+    """Schedule-spec resolution shared by every conv entry point.
+
+      None          analytic multi-grained selection (roofline model);
+      "auto"        tuned-cache lookup first, analytic on miss — never
+                    measures on the hot path (see repro.tune);
+      "TB11"/...    forced schedule, analytic blocks;
+      ScheduleChoice  used exactly as given (the tuner's measurement path).
+    """
+    if isinstance(schedule, ScheduleChoice):
+        return schedule
+    if schedule == "auto":
+        from repro.tune.autotune import resolve_schedule  # avoids cycle
+        return resolve_schedule(scene, interpret=interpret)
+    if schedule is None:
+        return select_schedule(scene)
+    return select_schedule(scene, allowed=(schedule,))
+
+
 def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
-                 schedule: Optional[str] = None,
+                 schedule: ScheduleSpec = None,
                  interpret: bool = True,
                  use_pallas: bool = True) -> jax.Array:
     """Multi-grained convolution in the paper's layouts.
 
     Args:
       inp: [inH, inW, IC, B]; flt: [fltH, fltW, IC, OC].
-      schedule: force "TB11"/"TB18"/"TB88"; None = multi-grained auto-select.
+      schedule: force "TB11"/"TB18"/"TB88"; None = analytic auto-select;
+        "auto" = tuned-cache resolution (repro.tune) with analytic fallback;
+        a ScheduleChoice pins the exact (schedule, bm, bn, bk).
       interpret: run the Pallas kernel in interpret mode (CPU validation);
         set False on real TPU.
       use_pallas: False routes to the pure-jnp reference (used by the
@@ -74,10 +98,7 @@ def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
     assert flt.shape == scene.flt_shape(), (flt.shape, scene.flt_shape())
     if not use_pallas:
         return ref.conv_ref(inp, flt, scene)
-    if schedule is None:
-        choice = select_schedule(scene)
-    else:
-        choice = select_schedule(scene, allowed=(schedule,))
+    choice = resolve_choice(scene, schedule, interpret)
     return _mg3m_conv_impl(inp, flt, scene, choice, interpret)
 
 

@@ -1,0 +1,14 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+The pinned JAX exposes ``pltpu.TPUCompilerParams``; newer releases renamed it
+to ``pltpu.CompilerParams``.  Kernels import ``TPUCompilerParams`` from here so
+they run unchanged on either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["TPUCompilerParams"]

@@ -1,0 +1,24 @@
+"""repro.tune — empirical autotuning with a persistent schedule cache.
+
+Turns MG3MConv schedule selection from a static roofline formula into a
+measured, cached decision system: enumerate the feasible block space
+(``space``), wall-clock the analytically-pruned top-k through the real
+kernel dispatch (``measure``), persist winners keyed by canonical scene
+signature (``cache``), and resolve ``schedule="auto"`` from that artifact
+(``autotune.resolve_schedule``).
+"""
+from repro.tune.autotune import TunedChoice, autotune_scene, resolve_schedule
+from repro.tune.cache import (CODE_VERSION, ScheduleCache, default_backend,
+                              default_cache, resolve_cache_path,
+                              scene_signature, set_default_cache)
+from repro.tune.measure import make_operands, measure_choice, proxy_scene
+from repro.tune.space import (CandidatePoint, block_candidates,
+                              enumerate_space, ranked_space)
+
+__all__ = [
+    "TunedChoice", "autotune_scene", "resolve_schedule",
+    "CODE_VERSION", "ScheduleCache", "default_backend", "default_cache",
+    "resolve_cache_path", "scene_signature", "set_default_cache",
+    "make_operands", "measure_choice", "proxy_scene",
+    "CandidatePoint", "block_candidates", "enumerate_space", "ranked_space",
+]

@@ -1,0 +1,211 @@
+"""Persistent schedule cache — the autotuner's memory.
+
+A JSON artifact maps a *canonical scene signature* (problem dims + dtype +
+backend + tuner code version) to the tuned record produced by
+``tune/autotune.py``.  Layered:
+
+  disk   JSON file, merge-on-save (concurrent tuning runs union their
+         results; on key collision higher measurement fidelity wins, then
+         the faster measured choice), atomic tmp+rename write;
+  memory an LRU-bounded dict fronting the file, with hit/miss counters so
+         tests (and the ``schedule="auto"`` dispatch path) can observe
+         resolution behavior.
+
+Path resolution order: explicit argument > ``$REPRO_TUNE_CACHE`` >
+``~/.cache/repro/tune_cache.json``.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import ScheduleChoice
+from repro.core.scene import ConvScene
+
+# Bump when kernels / the measurement harness change meaning of cached µs.
+CODE_VERSION = "mg3m-tune-v1"
+ENV_VAR = "REPRO_TUNE_CACHE"
+DEFAULT_PATH = os.path.join("~", ".cache", "repro", "tune_cache.json")
+_SCHEMA = 1
+
+
+def resolve_cache_path(path: Optional[str] = None) -> str:
+    """Explicit path > $REPRO_TUNE_CACHE > ~/.cache default."""
+    p = path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+    return os.path.abspath(os.path.expanduser(p))
+
+
+def default_backend(interpret: bool = True) -> str:
+    """Backend tag for cache keys: timings on CPU-interpret are not timings
+    on a real TPU, so they must never alias."""
+    base = jax.default_backend()
+    return f"{base}+interpret" if interpret else base
+
+
+def scene_signature(scene: ConvScene, *, backend: str,
+                    version: str = CODE_VERSION) -> str:
+    """Canonical cache key for a scene.
+
+    Stable across cosmetic aliases of the same problem — notably dtype
+    spellings (``"float32"`` / ``"<f4"`` / ``"f4"`` all canonicalize through
+    ``jnp.dtype().name``) — and explicit about everything that changes the
+    measured answer: every geometric dim, dtype, backend, code version.
+    """
+    dt = jnp.dtype(scene.dtype).name
+    return (f"v={version}|be={backend}|dt={dt}"
+            f"|B={scene.B}|IC={scene.IC}|OC={scene.OC}"
+            f"|in={scene.inH}x{scene.inW}|flt={scene.fltH}x{scene.fltW}"
+            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}")
+
+
+def choice_to_dict(choice: ScheduleChoice) -> Dict:
+    return {
+        "schedule": choice.schedule, "bm": choice.bm, "bn": choice.bn,
+        "bk": choice.bk, "predicted_s": choice.predicted_s,
+        "compute_s": choice.compute_s, "hbm_s": choice.hbm_s,
+        "vmem_bytes": choice.vmem_bytes, "notes": choice.notes,
+    }
+
+
+def choice_from_dict(d: Dict) -> ScheduleChoice:
+    return ScheduleChoice(
+        schedule=d["schedule"], bm=int(d["bm"]), bn=int(d["bn"]),
+        bk=int(d["bk"]), predicted_s=float(d["predicted_s"]),
+        compute_s=float(d["compute_s"]), hbm_s=float(d["hbm_s"]),
+        vmem_bytes=int(d["vmem_bytes"]), notes=d.get("notes", ""),
+    )
+
+
+def _beats(rec: Dict, mine: Dict) -> bool:
+    """Collision rule: higher measurement fidelity wins (an exact-scene
+    timing beats any proxy-capped one — their µs are not comparable);
+    at equal fidelity the faster measured choice wins."""
+    rank = lambda r: (r.get("proxy") is not None,
+                      r.get("measured_us", float("inf")))
+    return rank(rec) < rank(mine)
+
+
+class ScheduleCache:
+    """LRU-fronted persistent map: scene signature -> tuned record dict."""
+
+    def __init__(self, path: Optional[str] = None, *, max_entries: int = 4096):
+        self.path = resolve_cache_path(path)
+        self.max_entries = max_entries
+        self._mem: "collections.OrderedDict[str, Dict]" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        if os.path.exists(self.path):
+            # Tolerant on construction: a half-written artifact must not
+            # brick the schedule="auto" hot path (explicit load() is strict).
+            try:
+                self.load()
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"repro.tune: ignoring unreadable cache {self.path}: {e}",
+                      file=sys.stderr)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    # -- key plumbing ------------------------------------------------------
+    def key(self, scene: ConvScene, backend: Optional[str] = None) -> str:
+        return scene_signature(scene, backend=backend or default_backend())
+
+    # -- memory layer ------------------------------------------------------
+    def get(self, scene: ConvScene, backend: Optional[str] = None
+            ) -> Optional[Dict]:
+        """Tuned record for a scene, or None on miss (LRU-touching)."""
+        k = self.key(scene, backend)
+        rec = self._mem.get(k)
+        if rec is None:
+            self.misses += 1
+            return None
+        self._mem.move_to_end(k)
+        self.hits += 1
+        return rec
+
+    def get_choice(self, scene: ConvScene, backend: Optional[str] = None
+                   ) -> Optional[ScheduleChoice]:
+        rec = self.get(scene, backend)
+        return choice_from_dict(rec["choice"]) if rec else None
+
+    def put(self, scene: ConvScene, record: Dict,
+            backend: Optional[str] = None) -> str:
+        k = self.key(scene, backend)
+        self._mem[k] = record
+        self._mem.move_to_end(k)
+        self._evict()
+        return k
+
+    def _evict(self) -> None:
+        while len(self._mem) > self.max_entries:
+            self._mem.popitem(last=False)  # evict least-recently used
+
+    # -- disk layer --------------------------------------------------------
+    def load(self, path: Optional[str] = None) -> int:
+        """Merge entries from a JSON artifact into memory; returns count."""
+        p = resolve_cache_path(path) if path else self.path
+        with open(p) as f:
+            doc = json.load(f)
+        entries = doc.get("entries", {})
+        for k, rec in entries.items():
+            self._merge_entry(k, rec)
+        self._evict()
+        return len(entries)
+
+    def _merge_entry(self, k: str, rec: Dict) -> None:
+        mine = self._mem.get(k)
+        if mine is None or _beats(rec, mine):
+            self._mem[k] = rec
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Merge-on-save: union with whatever is on disk, write atomically.
+
+        The union happens in the artifact only — disk entries beyond the
+        LRU bound are preserved on disk without inflating memory."""
+        p = resolve_cache_path(path) if path else self.path
+        entries = dict(self._mem)
+        if os.path.exists(p):
+            try:
+                with open(p) as f:
+                    for k, rec in json.load(f).get("entries", {}).items():
+                        if k not in entries or _beats(rec, entries[k]):
+                            entries[k] = rec
+            except (json.JSONDecodeError, OSError):
+                pass  # corrupt artifact: overwrite with our state
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        doc = {"schema": _SCHEMA, "version": CODE_VERSION,
+               "entries": entries}
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, p)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return p
+
+
+# -- process-wide default cache (consulted by the schedule="auto" path) -----
+_default: Optional[ScheduleCache] = None
+
+
+def default_cache() -> ScheduleCache:
+    global _default
+    if _default is None:
+        _default = ScheduleCache()
+    return _default
+
+
+def set_default_cache(cache: Optional[ScheduleCache]) -> None:
+    """Install (or with None, reset) the process-wide cache — used by the
+    tuning CLI after a batch run and by tests."""
+    global _default
+    _default = cache

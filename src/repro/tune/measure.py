@@ -1,0 +1,91 @@
+"""Measurement harness: wall-clock one candidate schedule through the real
+``ops.mg3m_conv_op`` dispatch.
+
+Honesty conventions follow ``benchmarks/common.py``: on this container the
+kernels run in Pallas interpret mode on CPU, so absolute µs validate
+*relative* candidate ordering, not TPU truth; on a real TPU pass
+``interpret=False`` and the same harness times compiled kernels.  Proxy mode
+(channel/batch/spatial caps) measures a shrunken stand-in of the scene —
+every use is recorded in the tuned artifact, never silent.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import ScheduleChoice
+from repro.core.scene import ConvScene
+
+# A candidate that cannot produce one timed call inside this budget is scored
+# at whatever it cost so far — bad-but-finite beats hanging the whole tune.
+DEFAULT_TIMEOUT_S = 120.0
+
+
+def proxy_scene(scene: ConvScene, *, measure_batch: Optional[int] = None,
+                measure_max_ch: Optional[int] = None,
+                measure_max_hw: Optional[int] = None) -> ConvScene:
+    """Channel/batch/spatial-capped stand-in for wall-clock measurement.
+
+    Caps shrink the grid a candidate runs over so interpret-mode timing is
+    feasible on CPU — but the kernel wrapper clips blocks to the capped
+    dims, so distinct full-scene candidates can alias to the same executed
+    kernel here; the autotuner dedups on the clipped execution before
+    measuring.  The cap keeps the filter window valid.
+    """
+    d = dict(scene.__dict__)
+    if measure_batch:
+        d["B"] = min(scene.B, measure_batch)
+    if measure_max_ch:
+        d["IC"] = min(scene.IC, measure_max_ch)
+        d["OC"] = min(scene.OC, measure_max_ch)
+    if measure_max_hw:
+        min_h = scene.fltH + scene.stdH - 2 * scene.padH
+        min_w = scene.fltW + scene.stdW - 2 * scene.padW
+        d["inH"] = max(min(scene.inH, measure_max_hw), min_h, 1)
+        d["inW"] = max(min(scene.inW, measure_max_hw), min_w, 1)
+    return ConvScene(**d)
+
+
+def make_operands(scene: ConvScene, seed: int = 0):
+    """Random IN/FLT in the scene's paper layouts and dtype."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    dt = jnp.dtype(scene.dtype)
+    inp = jax.random.normal(k1, scene.in_shape(), jnp.float32).astype(dt)
+    flt = jax.random.normal(k2, scene.flt_shape(), jnp.float32).astype(dt)
+    return inp, flt
+
+
+def measure_choice(scene: ConvScene, choice: ScheduleChoice, *,
+                   interpret: bool = True, iters: int = 3, warmup: int = 1,
+                   timeout_s: float = DEFAULT_TIMEOUT_S) -> float:
+    """Median wall-time (µs) of ``mg3m_conv_op`` pinned to ``choice``.
+
+    Warmup triggers compilation; the remaining budget bounds how many timed
+    iterations actually run (always at least one).  An infeasible candidate
+    (compile/shape failure) scores ``inf`` so the picker skips it instead of
+    aborting the tune.
+    """
+    from repro.kernels import ops  # local: keeps tune importable sans kernels
+
+    inp, flt = make_operands(scene)
+    t0 = time.perf_counter()
+    try:
+        fn = lambda: ops.mg3m_conv_op(inp, flt, scene, schedule=choice,
+                                      interpret=interpret)
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn())
+        times = []
+        for _ in range(max(iters, 1)):
+            t1 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t1)
+            if time.perf_counter() - t0 > timeout_s:
+                break
+        times.sort()
+        return times[len(times) // 2] * 1e6
+    except Exception:  # noqa: BLE001 — any kernel failure = infeasible point
+        return math.inf

@@ -1,0 +1,109 @@
+"""Search-space enumeration for the empirical autotuner.
+
+This module owns the candidate (schedule, bm, bn, bk) grid that used to live
+as three ad-hoc lists inside ``core/mapping.py::candidate_blocks``.  The
+mapping selector still consumes it (via delegation) for analytic-only
+selection; the autotuner additionally uses the analytic ``_score`` as a
+*pruning ranker* over the same space before measuring the top-k survivors.
+
+Space shape per schedule (hardware-aligned, VMEM-budget-filtered):
+
+  TB11  a single point — the whole MM_unit resident.
+  TB18  a pow2 ladder of OC-slice widths plus the exact sublane-rounded OC.
+  TB88  a 3D grid of (bm, bn, bk) tiles; bn is lane-aligned (128 multiples),
+        bm/bk sublane-aligned, all clipped to the rounded-up problem dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import mapping
+from repro.core.mapping import (LANE, SUBLANE, SCHEDULES, ScheduleChoice,
+                                VMEM_BUDGET)
+from repro.core.scene import ConvScene, round_up
+
+# Pow2 ladders, wider than the old hardcoded lists so the measured search can
+# disagree with the analytic model's habits.
+_TB18_BM = (8, 16, 32, 64, 128, 256, 512)
+_TB88_BM = (32, 64, 128, 256, 512)
+_TB88_BN = (128, 256, 512)
+_TB88_BK = (32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidatePoint:
+    """One point of the search space (blocks are full-scene, pre-clipping)."""
+
+    schedule: str
+    bm: int
+    bn: int
+    bk: int
+
+    def key(self) -> Tuple[str, int, int, int]:
+        return (self.schedule, self.bm, self.bn, self.bk)
+
+
+def block_candidates(scene: ConvScene, schedule: str
+                     ) -> Tuple[Tuple[int, int, int], ...]:
+    """Hardware-aligned (bm, bn, bk) candidates for one schedule.
+
+    Supersedes the inline lists in ``core/mapping.py``; results are deduped
+    but NOT VMEM-filtered (``mapping._score`` rejects over-budget points).
+    """
+    m, n, k = scene.M, scene.N, scene.K
+    if schedule == "TB11":
+        return ((m, n, k),)
+    if schedule == "TB18":
+        cands = [(bm, n, k) for bm in _TB18_BM if bm < m]
+        cands.append((round_up(m, SUBLANE), n, k))
+        return tuple(dict.fromkeys(cands))
+    if schedule != "TB88":
+        raise ValueError(f"unknown schedule {schedule!r}")
+    cands = []
+    for bm in _TB88_BM:
+        for bn in _TB88_BN:
+            for bk in _TB88_BK:
+                cands.append((min(bm, round_up(m, SUBLANE)),
+                              min(bn, round_up(n, LANE)),
+                              min(bk, round_up(k, SUBLANE))))
+    return tuple(dict.fromkeys(cands))
+
+
+def enumerate_space(scene: ConvScene,
+                    schedules: Sequence[str] = SCHEDULES,
+                    vmem_budget: int = VMEM_BUDGET
+                    ) -> Tuple[CandidatePoint, ...]:
+    """All feasible points: aligned blocks whose working set fits VMEM."""
+    points = []
+    for schedule in schedules:
+        for bm, bn, bk in block_candidates(scene, schedule):
+            if mapping._vmem_bytes(scene, schedule, bm, bn, bk) <= vmem_budget:
+                points.append(CandidatePoint(schedule, bm, bn, bk))
+    return tuple(points)
+
+
+def ranked_space(scene: ConvScene,
+                 schedules: Sequence[str] = SCHEDULES,
+                 top_k: Optional[int] = None) -> List[ScheduleChoice]:
+    """Feasible points scored by the analytic model, best-predicted first.
+
+    This is the autotuner's pruning stage: the roofline model orders the
+    space, measurement then decides among the ``top_k`` survivors.
+    """
+    scored = []
+    for pt in enumerate_space(scene, schedules):
+        choice = mapping._score(scene, pt.schedule, pt.bm, pt.bn, pt.bk)
+        if choice is not None:
+            scored.append(choice)
+    if not scored:
+        # Mirror select_schedule's escape hatch: smallest aligned TB88 tiles.
+        bm = min(128, round_up(scene.M, SUBLANE))
+        bn = min(128, round_up(scene.N, LANE))
+        bk = min(128, round_up(scene.K, SUBLANE))
+        choice = mapping._score(scene, "TB88", bm, bn, bk)
+        if choice is None:
+            raise ValueError(f"no feasible schedule for {scene.describe()}")
+        scored.append(choice)
+    scored.sort(key=lambda c: c.predicted_s)
+    return scored[:top_k] if top_k else scored

@@ -1,4 +1,8 @@
 """Hypothesis property tests on the multi-grained selector's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

@@ -1,4 +1,8 @@
 """MoE routing invariants (unit + hypothesis property tests)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
