@@ -5,8 +5,8 @@ import argparse
 import json
 import os
 
-from benchmarks import (batch, channels, cnns, filters, granularity,
-                        padstride, tuned)
+from benchmarks import (batch, calibration, channels, cnns, filters,
+                        granularity, padstride, tuned)
 from benchmarks.common import emit
 
 
@@ -33,12 +33,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
-                         "padstride,cnns,granularity,roofline,tuned")
+                         "padstride,cnns,granularity,roofline,tuned,"
+                         "calibration")
     args = ap.parse_args()
     mods = {"channels": channels.rows, "batch": batch.rows,
             "filters": filters.rows, "padstride": padstride.rows,
             "cnns": cnns.rows, "granularity": granularity.rows,
-            "roofline": roofline_rows, "tuned": tuned.rows}
+            "roofline": roofline_rows, "tuned": tuned.rows,
+            "calibration": calibration.rows}
     only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
     for name in only:

@@ -103,6 +103,8 @@ def main(argv=None) -> int:
         print(f"# prediction error: mean={sum(errors)/len(errors):.3f} "
               f"max={max(errors):.3f}; analytic disagreed on "
               f"{disagreements}/{tuned_total} scenes")
+        print(f"# next: fit the cost model from these records -> "
+              f"scripts/calibrate.py --cache {path}")
     return 0
 
 

@@ -4,12 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.mapping import ScheduleChoice, predicted_efficiency, select_schedule
+from repro.core.mapping import (ClassCorrection, CostModel, ScheduleChoice,
+                                predicted_efficiency, select_schedule)
 from repro.core.scene import ConvScene
 from repro.kernels import ops, ref
 from repro.kernels.ops import ScheduleSpec
 
-__all__ = ["ConvScene", "ScheduleChoice", "ScheduleSpec", "select_schedule",
+__all__ = ["ConvScene", "CostModel", "ClassCorrection", "ScheduleChoice",
+           "ScheduleSpec", "select_schedule",
            "mg3m_conv", "mg3m_conv_nhwc", "mg3m_conv_trainable",
            "predicted_efficiency"]
 

@@ -22,11 +22,15 @@ that trade VMEM residency (data reuse) against MXU tile utilization:
 
 The selector is an analytic roofline model (compute term vs HBM-traffic term,
 with MXU tile-quantization waste) — the software analogue of paper Fig. 14.
+The machine constants and per-scene-class correction factors live in a
+``CostModel``: the default instance is the pure datasheet roofline, and
+``repro.tune.calibrate`` fits corrected instances from measured tune records
+so the same selector code can run either model.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -36,6 +40,7 @@ from repro.core.scene import ConvScene, ceil_div, round_up
 MXU_FLOPS_BF16 = 197e12
 MXU_FLOPS_FP32 = MXU_FLOPS_BF16 / 2
 HBM_BW = 819e9  # bytes/s
+STEP_OVERHEAD_S = 150e-9 * 0.05  # amortized per-grid-step issue overhead
 VMEM_BYTES = 16 * 2 ** 20
 # Leave headroom for Mosaic's double buffering (the paper's Alg.3 analogue
 # happens automatically: in-flight copies need the second buffer).
@@ -45,6 +50,84 @@ SUBLANE = 8   # second-minor tile (fp32)
 MXU_DIM = 128
 
 SCHEDULES = ("TB11", "TB18", "TB88")
+
+# Arithmetic-intensity band edges (FLOPs/byte) for cost-model scene classes.
+AI_BAND_EDGES = (8.0, 64.0, 512.0)
+
+
+def ai_band(ai: float) -> str:
+    """Arithmetic-intensity band label used in cost-model class keys."""
+    for i, edge in enumerate(AI_BAND_EDGES):
+        if ai < edge:
+            return f"ai{i}"
+    return f"ai{len(AI_BAND_EDGES)}"
+
+
+def class_key(schedule: str, bound: str, band: str) -> str:
+    """Scene-class key: schedule x bound-type x arithmetic-intensity band."""
+    return f"{schedule}|{bound}|{band}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassCorrection:
+    """Measured correction for one scene class (see ``tune/calibrate.py``).
+
+    ``compute_scale``/``bw_scale`` multiply the datasheet rates into
+    *effective* rates (<1 = slower than the roofline assumes);
+    ``overhead_s`` replaces the per-grid-step overhead (None = keep the
+    model's base overhead).
+    """
+
+    compute_scale: float = 1.0
+    bw_scale: float = 1.0
+    overhead_s: Optional[float] = None
+
+
+_IDENTITY_CORRECTION = ClassCorrection()
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Machine constants + per-class corrections behind the roofline model.
+
+    The default instance is the uncalibrated v5e datasheet model.  Calibrated
+    instances (``repro.tune.calibrate``) carry the same base constants plus
+    ``corrections`` keyed by ``class_key(schedule, bound, ai_band)``; lookup
+    falls back exact class -> "schedule|bound|*" -> "schedule|*|*" ->
+    "*|*|*" -> identity.  The global tier matters: without it, a schedule
+    with no measured records would be scored on raw datasheet rates and look
+    arbitrarily faster than every calibrated (slowed-down) class.
+    """
+
+    mxu_flops_bf16: float = MXU_FLOPS_BF16
+    mxu_flops_fp32: float = MXU_FLOPS_FP32
+    hbm_bw: float = HBM_BW
+    step_overhead_s: float = STEP_OVERHEAD_S
+    corrections: Mapping[str, ClassCorrection] = dataclasses.field(
+        default_factory=dict)
+    source: str = "analytic"   # provenance: "analytic" or the artifact path
+
+    def mxu_rate(self, dtype: str) -> float:
+        return (self.mxu_flops_bf16 if jnp.dtype(dtype).itemsize <= 2
+                else self.mxu_flops_fp32)
+
+    def correction_for(self, schedule: str, bound: str, band: str
+                       ) -> ClassCorrection:
+        for key in (class_key(schedule, bound, band),
+                    class_key(schedule, bound, "*"),
+                    class_key(schedule, "*", "*"),
+                    class_key("*", "*", "*")):
+            corr = self.corrections.get(key)
+            if corr is not None:
+                return corr
+        return _IDENTITY_CORRECTION
+
+    @property
+    def is_calibrated(self) -> bool:
+        return bool(self.corrections)
+
+
+DEFAULT_COST_MODEL = CostModel()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +154,14 @@ def _dtype_bytes(dtype: str) -> int:
 
 
 def _mxu_rate(dtype: str) -> float:
-    return MXU_FLOPS_BF16 if jnp.dtype(dtype).itemsize <= 2 else MXU_FLOPS_FP32
+    return DEFAULT_COST_MODEL.mxu_rate(dtype)
+
+
+def grid_steps(scene: ConvScene, bm: int, bn: int, bk: int) -> int:
+    """Total Pallas grid steps of a blocked schedule over one scene."""
+    return (scene.num_spatial_tasks
+            * ceil_div(scene.M, bm) * ceil_div(scene.N, bn)
+            * scene.fltH * scene.fltW * ceil_div(scene.K, bk))
 
 
 def _quantized_macs(scene: ConvScene, bm: int, bn: int, bk: int) -> float:
@@ -87,14 +177,7 @@ def _quantized_macs(scene: ConvScene, bm: int, bn: int, bk: int) -> float:
     # only to the sublane tile.
     eff_k = round_up(min(bk, scene.K), SUBLANE)
     per_step = eff_m * eff_n * eff_k
-    n_steps = (
-        scene.num_spatial_tasks
-        * ceil_div(scene.M, bm)
-        * ceil_div(scene.N, bn)
-        * scene.fltH * scene.fltW
-        * ceil_div(scene.K, bk)
-    )
-    return per_step * n_steps
+    return per_step * grid_steps(scene, bm, bn, bk)
 
 
 def _traffic_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> int:
@@ -136,19 +219,27 @@ def _vmem_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> i
     return 2 * (flt_blk + in_blk + out_blk) + acc
 
 
-def _score(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int
-           ) -> Optional[ScheduleChoice]:
+def _score(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int,
+           model: Optional[CostModel] = None) -> Optional[ScheduleChoice]:
+    model = model if model is not None else DEFAULT_COST_MODEL
     vmem = _vmem_bytes(scene, schedule, bm, bn, bk)
     if vmem > VMEM_BUDGET:
         return None
     macs = _quantized_macs(scene, bm, bn, bk)
-    compute_s = 2 * macs / _mxu_rate(scene.dtype)
-    hbm_s = _traffic_bytes(scene, schedule, bm, bn, bk) / HBM_BW
+    raw_compute_s = 2 * macs / model.mxu_rate(scene.dtype)
+    raw_hbm_s = _traffic_bytes(scene, schedule, bm, bn, bk) / model.hbm_bw
+    # Scene class for correction lookup is decided on the *raw* roofline
+    # terms — calibration buckets were built the same way, and deciding it
+    # on corrected terms would make the class depend on its own correction.
+    bound = "compute" if raw_compute_s >= raw_hbm_s else "memory"
+    corr = model.correction_for(schedule, bound,
+                                ai_band(scene.arithmetic_intensity))
+    compute_s = raw_compute_s / max(corr.compute_scale, 1e-30)
+    hbm_s = raw_hbm_s / max(corr.bw_scale, 1e-30)
     # Pallas fixed per-grid-step overhead (pipeline bubbles on tiny steps).
-    n_steps = (scene.num_spatial_tasks * ceil_div(scene.M, bm)
-               * ceil_div(scene.N, bn) * scene.fltH * scene.fltW
-               * ceil_div(scene.K, bk))
-    overhead_s = n_steps * 150e-9 * 0.05  # amortized issue overhead
+    per_step = (corr.overhead_s if corr.overhead_s is not None
+                else model.step_overhead_s)
+    overhead_s = grid_steps(scene, bm, bn, bk) * per_step
     total = max(compute_s, hbm_s) + overhead_s
     return ScheduleChoice(schedule, bm, bn, bk, total, compute_s, hbm_s, vmem)
 
@@ -165,22 +256,38 @@ def candidate_blocks(scene: ConvScene, schedule: str) -> Tuple[Tuple[int, int, i
 
 
 def select_schedule(scene: ConvScene,
-                    allowed: Tuple[str, ...] = SCHEDULES) -> ScheduleChoice:
-    """Pick the best (schedule, blocks) for a scene — paper Fig. 14 in code."""
+                    allowed: Tuple[str, ...] = SCHEDULES,
+                    model: Optional[CostModel] = None) -> ScheduleChoice:
+    """Pick the best (schedule, blocks) for a scene — paper Fig. 14 in code.
+
+    ``allowed`` restricts the grains considered (a forced schedule passes a
+    1-tuple); when none of them fits VMEM at any candidate blocking, raises
+    ``ValueError`` — a forced grain must never silently become another one.
+    ``model`` swaps the cost model (default: uncalibrated roofline).
+    """
     best: Optional[ScheduleChoice] = None
     for schedule in allowed:
         for bm, bn, bk in candidate_blocks(scene, schedule):
-            choice = _score(scene, schedule, bm, bn, bk)
+            choice = _score(scene, schedule, bm, bn, bk, model)
             if choice is not None and (best is None
                                        or choice.predicted_s < best.predicted_s):
                 best = choice
     if best is None:
-        # Nothing fits VMEM even fully blocked (huge IC*B): force TB88 with
-        # the smallest aligned blocks; the kernel wrapper will tile further.
+        # Nothing in `allowed` fits VMEM even fully blocked (huge IC*B).
+        # TB88 can always shrink to minimal aligned tiles, so when it is
+        # allowed, use that escape hatch; otherwise the requested grain is
+        # genuinely infeasible and silently substituting a different kernel
+        # would invalidate any forced-schedule comparison — raise instead.
+        if "TB88" not in allowed:
+            raise ValueError(
+                f"forced schedule(s) {allowed} do not fit the VMEM budget "
+                f"({VMEM_BUDGET} B) at any candidate blocking for "
+                f"{scene.describe()}; allow TB88 (or use schedule=None) "
+                f"for a tiled fallback")
         bm, bn, bk = (min(128, round_up(scene.M, SUBLANE)),
                       min(128, round_up(scene.N, LANE)),
                       min(128, round_up(scene.K, SUBLANE)))
-        choice = _score(scene, "TB88", bm, bn, bk)
+        choice = _score(scene, "TB88", bm, bn, bk, model)
         if choice is None:
             raise ValueError(f"no feasible schedule for {scene.describe()}")
         best = choice
@@ -188,7 +295,9 @@ def select_schedule(scene: ConvScene,
 
 
 def granularity_map(b_values, c_values, dtype: str = "float32",
-                    spatial: int = 14, flt: int = 3) -> Dict[Tuple[int, int, int], str]:
+                    spatial: int = 14, flt: int = 3,
+                    model: Optional[CostModel] = None
+                    ) -> Dict[Tuple[int, int, int], str]:
     """Reproduce paper Fig. 14: best grain per (B, IC, OC) grid."""
     out = {}
     for b in b_values:
@@ -197,12 +306,14 @@ def granularity_map(b_values, c_values, dtype: str = "float32",
                 scene = ConvScene(B=b, IC=ic, OC=oc, inH=spatial, inW=spatial,
                                   fltH=flt, fltW=flt, padH=flt // 2,
                                   padW=flt // 2, dtype=dtype)
-                out[(b, ic, oc)] = select_schedule(scene).schedule
+                out[(b, ic, oc)] = select_schedule(scene, model=model).schedule
     return out
 
 
-def predicted_efficiency(scene: ConvScene, choice: ScheduleChoice) -> float:
+def predicted_efficiency(scene: ConvScene, choice: ScheduleChoice,
+                         model: Optional[CostModel] = None) -> float:
     """Useful FLOPs / (peak FLOPs x modeled time) — the paper's
     'hardware efficiency' metric under the analytic model."""
-    ideal_s = scene.flops / _mxu_rate(scene.dtype)
+    model = model if model is not None else DEFAULT_COST_MODEL
+    ideal_s = scene.flops / model.mxu_rate(scene.dtype)
     return min(1.0, ideal_s / max(choice.predicted_s, 1e-30))

@@ -57,14 +57,27 @@ def _mg3m_conv_impl(inp: jax.Array, flt: jax.Array, scene: ConvScene,
     return out
 
 
+def _selection_cost_model():
+    """Cost model for selection: the calibrated one when an artifact (or an
+    explicitly-installed model) is present, else the analytic default.
+    Falls back silently — selection must work without the tune subsystem."""
+    try:
+        from repro.tune.calibrate import active_cost_model  # avoids cycle
+        return active_cost_model()
+    except Exception:  # noqa: BLE001 — any tune-side failure = analytic model
+        return None
+
+
 def resolve_choice(scene: ConvScene, schedule: ScheduleSpec,
                    interpret: bool = True) -> ScheduleChoice:
     """Schedule-spec resolution shared by every conv entry point.
 
-      None          analytic multi-grained selection (roofline model);
-      "auto"        tuned-cache lookup first, analytic on miss — never
-                    measures on the hot path (see repro.tune);
-      "TB11"/...    forced schedule, analytic blocks;
+      None          multi-grained selection under the active cost model
+                    (calibrated when an artifact exists, else roofline);
+      "auto"        tuned-cache lookup first, cost-model selection on miss —
+                    never measures on the hot path (see repro.tune);
+      "TB11"/...    forced schedule, model-chosen blocks; raises if the
+                    forced grain cannot fit VMEM (never substitutes another);
       ScheduleChoice  used exactly as given (the tuner's measurement path).
     """
     if isinstance(schedule, ScheduleChoice):
@@ -73,8 +86,9 @@ def resolve_choice(scene: ConvScene, schedule: ScheduleSpec,
         from repro.tune.autotune import resolve_schedule  # avoids cycle
         return resolve_schedule(scene, interpret=interpret)
     if schedule is None:
-        return select_schedule(scene)
-    return select_schedule(scene, allowed=(schedule,))
+        return select_schedule(scene, model=_selection_cost_model())
+    return select_schedule(scene, allowed=(schedule,),
+                           model=_selection_cost_model())
 
 
 def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,

@@ -4,13 +4,21 @@ Turns MG3MConv schedule selection from a static roofline formula into a
 measured, cached decision system: enumerate the feasible block space
 (``space``), wall-clock the analytically-pruned top-k through the real
 kernel dispatch (``measure``), persist winners keyed by canonical scene
-signature (``cache``), and resolve ``schedule="auto"`` from that artifact
-(``autotune.resolve_schedule``).
+signature (``cache``), resolve ``schedule="auto"`` from that artifact
+(``autotune.resolve_schedule``), and feed the measured-vs-predicted pairs
+back into a calibrated cost model (``calibrate``) that selection uses on
+cache misses.
 """
 from repro.tune.autotune import TunedChoice, autotune_scene, resolve_schedule
 from repro.tune.cache import (CODE_VERSION, ScheduleCache, default_backend,
                               default_cache, resolve_cache_path,
-                              scene_signature, set_default_cache)
+                              scene_from_signature, scene_signature,
+                              set_default_cache)
+from repro.tune.calibrate import (CALIB_VERSION, CalibrationReport,
+                                  active_cost_model, fit_calibration,
+                                  load_calibration, resolve_calibration_path,
+                                  samples_from_cache, save_calibration,
+                                  set_active_cost_model)
 from repro.tune.measure import make_operands, measure_choice, proxy_scene
 from repro.tune.space import (CandidatePoint, block_candidates,
                               enumerate_space, ranked_space)
@@ -18,7 +26,11 @@ from repro.tune.space import (CandidatePoint, block_candidates,
 __all__ = [
     "TunedChoice", "autotune_scene", "resolve_schedule",
     "CODE_VERSION", "ScheduleCache", "default_backend", "default_cache",
-    "resolve_cache_path", "scene_signature", "set_default_cache",
+    "resolve_cache_path", "scene_from_signature", "scene_signature",
+    "set_default_cache",
+    "CALIB_VERSION", "CalibrationReport", "active_cost_model",
+    "fit_calibration", "load_calibration", "resolve_calibration_path",
+    "samples_from_cache", "save_calibration", "set_active_cost_model",
     "make_operands", "measure_choice", "proxy_scene",
     "CandidatePoint", "block_candidates", "enumerate_space", "ranked_space",
 ]

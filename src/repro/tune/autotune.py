@@ -110,11 +110,11 @@ def autotune_scene(scene: ConvScene, *,
     # a small proxy several full-scene candidates can alias to the *same*
     # executed kernel; measuring aliases separately would just rank noise.
     # Keep the analytically-best representative of each distinct execution.
+    clip = lambda c: (c.schedule, min(c.bm, msc.M), min(c.bn, msc.N),
+                      min(c.bk, msc.K))
     distinct: Dict = {}
     for c in candidates:
-        key = (c.schedule, min(c.bm, msc.M), min(c.bn, msc.N),
-               min(c.bk, msc.K))
-        distinct.setdefault(key, c)
+        distinct.setdefault(clip(c), c)
     timings = [(measure_fn(msc, c), c) for c in distinct.values()]
     best_us, best = min(timings, key=lambda t: t[0])
     if not math.isfinite(best_us):
@@ -130,12 +130,11 @@ def autotune_scene(scene: ConvScene, *,
             backend=backend, proxy=proxy)
 
     # The analytic favorite's measured time, for the tuned-vs-analytic table;
-    # reuse the timing if it was among the measured candidates.
+    # reuse the timing if its *clipped* execution was already wall-clocked —
+    # comparing full-scene blocks here would re-measure a kernel that is
+    # identical once the wrapper clips it to the measurement scene.
     analytic_us = next(
-        (us for us, c in timings
-         if (c.schedule, c.bm, c.bn, c.bk)
-         == (analytic.schedule, analytic.bm, analytic.bn, analytic.bk)),
-        None)
+        (us for us, c in timings if clip(c) == clip(analytic)), None)
     if analytic_us is None:
         analytic_us = measure_fn(msc, analytic)
 
@@ -155,9 +154,14 @@ def autotune_scene(scene: ConvScene, *,
 def resolve_schedule(scene: ConvScene, *,
                      cache: Optional[cache_mod.ScheduleCache] = None,
                      interpret: bool = True) -> ScheduleChoice:
-    """``schedule="auto"`` resolution: tuned cache first, analytic on miss.
+    """``schedule="auto"`` resolution: tuned cache first; on a miss, select
+    under the active cost model (calibrated when an artifact exists — see
+    ``tune/calibrate.py`` — else the analytic roofline).
 
     Never measures — the hot path must not block on a tuning run."""
     cache = cache if cache is not None else cache_mod.default_cache()
     choice = cache.get_choice(scene, cache_mod.default_backend(interpret))
-    return choice if choice is not None else select_schedule(scene)
+    if choice is not None:
+        return choice
+    from repro.tune import calibrate as calibrate_mod  # local: import order
+    return select_schedule(scene, model=calibrate_mod.active_cost_model())

@@ -26,7 +26,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.mapping import ScheduleChoice
+from repro.core.mapping import SCHEDULES, ScheduleChoice
 from repro.core.scene import ConvScene
 
 # Bump when kernels / the measurement harness change meaning of cached µs.
@@ -65,6 +65,30 @@ def scene_signature(scene: ConvScene, *, backend: str,
             f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}")
 
 
+def parse_signature(key: str) -> Dict[str, str]:
+    """Split a ``scene_signature`` key into its ``field=value`` parts."""
+    parts = {}
+    for tok in key.split("|"):
+        field, _, value = tok.partition("=")
+        parts[field] = value
+    return parts
+
+
+def scene_from_signature(key: str) -> ConvScene:
+    """Inverse of ``scene_signature`` (sans backend/version): rebuild the
+    scene a cache entry was tuned for, so calibration can re-derive the cost
+    terms of stored records without a side-channel scene table."""
+    p = parse_signature(key)
+    inH, inW = p["in"].split("x")
+    fltH, fltW = p["flt"].split("x")
+    padH, padW = p["pad"].split(",")
+    stdH, stdW = p["std"].split(",")
+    return ConvScene(B=int(p["B"]), IC=int(p["IC"]), OC=int(p["OC"]),
+                     inH=int(inH), inW=int(inW), fltH=int(fltH),
+                     fltW=int(fltW), padH=int(padH), padW=int(padW),
+                     stdH=int(stdH), stdW=int(stdW), dtype=p["dt"])
+
+
 def choice_to_dict(choice: ScheduleChoice) -> Dict:
     return {
         "schedule": choice.schedule, "bm": choice.bm, "bn": choice.bn,
@@ -81,6 +105,34 @@ def choice_from_dict(d: Dict) -> ScheduleChoice:
         compute_s=float(d["compute_s"]), hbm_s=float(d["hbm_s"]),
         vmem_bytes=int(d["vmem_bytes"]), notes=d.get("notes", ""),
     )
+
+
+_REQUIRED_CHOICE_KEYS = ("schedule", "bm", "bn", "bk", "predicted_s",
+                         "compute_s", "hbm_s", "vmem_bytes")
+
+
+def valid_record(rec) -> bool:
+    """Schema check for one tuned record as stored in the JSON artifact.
+
+    A hand-edited, truncated, or old-schema entry must be skipped on
+    load/merge rather than detonate as a ``KeyError`` on the
+    ``schedule="auto"`` hot path the first time its scene is resolved.
+    """
+    if not isinstance(rec, dict):
+        return False
+    ch = rec.get("choice")
+    if not isinstance(ch, dict) or any(k not in ch
+                                       for k in _REQUIRED_CHOICE_KEYS):
+        return False
+    if ch["schedule"] not in SCHEDULES:
+        return False
+    if not isinstance(rec.get("measured_us", 0.0), (int, float)):
+        return False
+    try:
+        choice_from_dict(ch)
+    except (KeyError, TypeError, ValueError):
+        return False
+    return True
 
 
 def _beats(rec: Dict, mine: Dict) -> bool:
@@ -112,6 +164,10 @@ class ScheduleCache:
 
     def __len__(self) -> int:
         return len(self._mem)
+
+    def records(self) -> Dict[str, Dict]:
+        """Snapshot of signature -> record (calibration's training data)."""
+        return dict(self._mem)
 
     # -- key plumbing ------------------------------------------------------
     def key(self, scene: ConvScene, backend: Optional[str] = None) -> str:
@@ -154,10 +210,16 @@ class ScheduleCache:
         with open(p) as f:
             doc = json.load(f)
         entries = doc.get("entries", {})
+        bad = {k for k, rec in entries.items() if not valid_record(rec)}
+        if bad:
+            print(f"repro.tune: skipping {len(bad)} malformed cache "
+                  f"entr{'y' if len(bad) == 1 else 'ies'} in {p} "
+                  f"(first: {sorted(bad)[0]!r})", file=sys.stderr)
         for k, rec in entries.items():
-            self._merge_entry(k, rec)
+            if k not in bad:
+                self._merge_entry(k, rec)
         self._evict()
-        return len(entries)
+        return len(entries) - len(bad)
 
     def _merge_entry(self, k: str, rec: Dict) -> None:
         mine = self._mem.get(k)
@@ -175,6 +237,8 @@ class ScheduleCache:
             try:
                 with open(p) as f:
                     for k, rec in json.load(f).get("entries", {}).items():
+                        if not valid_record(rec):
+                            continue   # drop malformed disk entries on save
                         if k not in entries or _beats(rec, entries[k]):
                             entries[k] = rec
             except (json.JSONDecodeError, OSError):

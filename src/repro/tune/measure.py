@@ -43,10 +43,13 @@ def proxy_scene(scene: ConvScene, *, measure_batch: Optional[int] = None,
         d["IC"] = min(scene.IC, measure_max_ch)
         d["OC"] = min(scene.OC, measure_max_ch)
     if measure_max_hw:
-        min_h = scene.fltH + scene.stdH - 2 * scene.padH
-        min_w = scene.fltW + scene.stdW - 2 * scene.padW
-        d["inH"] = max(min(scene.inH, measure_max_hw), min_h, 1)
-        d["inW"] = max(min(scene.inW, measure_max_hw), min_w, 1)
+        # Smallest input that still yields one output pixel is
+        # fltH - 2*padH (stride only affects how many *more* pixels fit),
+        # and a proxy must never be larger than the scene it stands in for.
+        min_h = max(scene.fltH - 2 * scene.padH, 1)
+        min_w = max(scene.fltW - 2 * scene.padW, 1)
+        d["inH"] = min(scene.inH, max(measure_max_hw, min_h))
+        d["inW"] = min(scene.inW, max(measure_max_hw, min_w))
     return ConvScene(**d)
 
 
@@ -65,8 +68,11 @@ def measure_choice(scene: ConvScene, choice: ScheduleChoice, *,
     """Median wall-time (µs) of ``mg3m_conv_op`` pinned to ``choice``.
 
     Warmup triggers compilation; the remaining budget bounds how many timed
-    iterations actually run (always at least one).  An infeasible candidate
-    (compile/shape failure) scores ``inf`` so the picker skips it instead of
+    iterations actually run.  The budget applies to warmup too: a candidate
+    that burns the whole ``timeout_s`` before producing a single timed call
+    scores ``inf`` (like an infeasible one) rather than hanging a batch tune
+    arbitrarily past its deadline.  An infeasible candidate (compile/shape
+    failure) likewise scores ``inf`` so the picker skips it instead of
     aborting the tune.
     """
     from repro.kernels import ops  # local: keeps tune importable sans kernels
@@ -78,6 +84,8 @@ def measure_choice(scene: ConvScene, choice: ScheduleChoice, *,
                                       interpret=interpret)
         for _ in range(max(warmup, 1)):
             jax.block_until_ready(fn())
+            if time.perf_counter() - t0 > timeout_s:
+                return math.inf  # budget exhausted before any timed iteration
         times = []
         for _ in range(max(iters, 1)):
             t1 = time.perf_counter()

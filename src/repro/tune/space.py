@@ -85,23 +85,32 @@ def enumerate_space(scene: ConvScene,
 
 def ranked_space(scene: ConvScene,
                  schedules: Sequence[str] = SCHEDULES,
-                 top_k: Optional[int] = None) -> List[ScheduleChoice]:
-    """Feasible points scored by the analytic model, best-predicted first.
+                 top_k: Optional[int] = None,
+                 model: Optional[mapping.CostModel] = None
+                 ) -> List[ScheduleChoice]:
+    """Feasible points scored by the cost model, best-predicted first.
 
-    This is the autotuner's pruning stage: the roofline model orders the
-    space, measurement then decides among the ``top_k`` survivors.
+    This is the autotuner's pruning stage: the roofline model (or a
+    calibrated ``model``) orders the space, measurement then decides among
+    the ``top_k`` survivors.
     """
     scored = []
     for pt in enumerate_space(scene, schedules):
-        choice = mapping._score(scene, pt.schedule, pt.bm, pt.bn, pt.bk)
+        choice = mapping._score(scene, pt.schedule, pt.bm, pt.bn, pt.bk, model)
         if choice is not None:
             scored.append(choice)
     if not scored:
-        # Mirror select_schedule's escape hatch: smallest aligned TB88 tiles.
+        # Mirror select_schedule's escape hatch: smallest aligned TB88 tiles —
+        # but only when TB88 is among the requested schedules; a restricted
+        # space must never sneak a different grain in (see select_schedule).
+        if "TB88" not in schedules:
+            raise ValueError(
+                f"schedule(s) {tuple(schedules)} have no VMEM-feasible "
+                f"blocking for {scene.describe()}")
         bm = min(128, round_up(scene.M, SUBLANE))
         bn = min(128, round_up(scene.N, LANE))
         bk = min(128, round_up(scene.K, SUBLANE))
-        choice = mapping._score(scene, "TB88", bm, bn, bk)
+        choice = mapping._score(scene, "TB88", bm, bn, bk, model)
         if choice is None:
             raise ValueError(f"no feasible schedule for {scene.describe()}")
         scored.append(choice)

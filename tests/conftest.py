@@ -1,0 +1,18 @@
+"""Test isolation: a developer's real tune cache / calibration artifact in
+``~/.cache/repro`` must never leak into assertions about analytic selection
+(and test runs must never pollute those artifacts)."""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_artifacts(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE",
+                       str(tmp_path / "isolated_tune_cache.json"))
+    monkeypatch.setenv("REPRO_CALIBRATION",
+                       str(tmp_path / "isolated_calibration.json"))
+    from repro import tune
+    tune.set_default_cache(None)
+    tune.set_active_cost_model(None)
+    yield
+    tune.set_default_cache(None)
+    tune.set_active_cost_model(None)

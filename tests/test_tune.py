@@ -3,6 +3,7 @@ import json
 import math
 import subprocess
 import sys
+import time
 import os
 
 import numpy as np
@@ -154,6 +155,39 @@ def test_cache_tolerates_corrupt_artifact_on_init(tmp_path, capsys):
         cache.load()                   # explicit load stays strict
 
 
+def test_cache_skips_malformed_entries_on_load(tmp_path, capsys):
+    """Regression: a malformed/old-schema entry made get_choice raise
+    KeyError on the schedule="auto" hot path.  Bad entries are skipped (with
+    a warning) on load and dropped from merges; good entries survive."""
+    path = str(tmp_path / "cache.json")
+    from repro.tune.cache import choice_to_dict
+    choice = tune.ranked_space(SC)[0]
+    good = tune.ScheduleCache(path)
+    good.put(SC, {"choice": choice_to_dict(choice), "measured_us": 7.0})
+    good.save()
+    with open(path) as f:
+        doc = json.load(f)
+    other = ConvScene(**{**SC.__dict__, "B": SC.B + 1})
+    third = ConvScene(**{**SC.__dict__, "B": SC.B + 2})
+    doc["entries"][good.key(other)] = {"choice": {"schedule": "TB11"},
+                                       "measured_us": 1.0}   # missing blocks
+    doc["entries"][good.key(third)] = "not-a-record"
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+    cache = tune.ScheduleCache(path)
+    assert "malformed" in capsys.readouterr().err
+    assert len(cache) == 1
+    assert cache.get_choice(SC) == choice           # hot path: no KeyError
+    assert cache.get_choice(other) is None
+    assert cache.get_choice(third) is None
+    # merge-on-save also drops the junk instead of preserving it forever
+    cache.save()
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert set(entries) == {good.key(SC)}
+
+
 def test_resolve_cache_path_env(tmp_path, monkeypatch):
     monkeypatch.setenv(tune.cache.ENV_VAR, str(tmp_path / "env.json"))
     assert tune.resolve_cache_path() == str(tmp_path / "env.json")
@@ -236,6 +270,149 @@ def test_proxy_scene_keeps_filter_window_valid():
                          measure_max_hw=8)
     assert p.outH > 0 and p.outW > 0
     assert p.B == 2 and p.IC == 3 and p.OC == 16
+
+
+def test_proxy_scene_min_clamp_is_stride_independent():
+    """Regression: the min-spatial clamp was `fltH + stdH - 2*padH`, so a
+    strided alexnet-L0 scene capped at hw=4 came back with inH=8 even though
+    inH=7 (= fltH - 2*padH) already yields a valid output."""
+    sc = ConvScene(B=128, IC=3, OC=64, inH=224, inW=224, fltH=11, fltW=11,
+                   padH=2, padW=2, stdH=4, stdW=4)
+    p = tune.proxy_scene(sc, measure_max_hw=4)
+    assert p.inH == 7 and p.inW == 7   # fltH - 2*padH, not + stride
+    assert p.outH > 0 and p.outW > 0
+
+
+def test_proxy_scene_never_exceeds_original_dims():
+    """A proxy is a stand-in for the scene — it must never be *larger*."""
+    sc = ConvScene(B=2, IC=4, OC=4, inH=5, inW=5, fltH=3, fltW=3)
+    p = tune.proxy_scene(sc, measure_max_hw=64)
+    assert p.inH == 5 and p.inW == 5
+
+
+def test_proxy_scene_property():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=200, deadline=None)
+    @given(inH=st.integers(3, 64), inW=st.integers(3, 64),
+           padH=st.integers(0, 3), padW=st.integers(0, 3),
+           fltH=st.integers(1, 11), fltW=st.integers(1, 11),
+           stdH=st.integers(1, 4), stdW=st.integers(1, 4),
+           cap=st.integers(1, 16))
+    def prop(inH, inW, padH, padW, fltH, fltW, stdH, stdW, cap):
+        try:
+            sc = ConvScene(B=2, IC=4, OC=4, inH=inH, inW=inW, fltH=fltH,
+                           fltW=fltW, padH=padH, padW=padW,
+                           stdH=stdH, stdW=stdW)
+        except ValueError:
+            return  # invalid original scene: nothing to proxy
+        p = tune.proxy_scene(sc, measure_max_hw=cap)
+        assert p.outH > 0 and p.outW > 0           # proxy stays valid
+        assert p.inH <= sc.inH and p.inW <= sc.inW  # never grows
+        # never larger than what the cap + filter window require
+        assert p.inH <= max(cap, max(fltH - 2 * padH, 1))
+        assert p.inW <= max(cap, max(fltW - 2 * padW, 1))
+
+    prop()
+
+
+def test_measure_timeout_enforced_during_warmup(monkeypatch):
+    """Regression: one pathological candidate could hang a batch tune far
+    past timeout_s because the warmup loop never checked the budget."""
+    from repro.tune import measure as measure_mod
+
+    calls = []
+
+    def slow_op(inp, flt, scene, schedule=None, interpret=True):
+        calls.append(1)
+        time.sleep(0.05)
+        import jax.numpy as jnp
+        return jnp.zeros(scene.out_shape(), jnp.float32)
+
+    monkeypatch.setattr(measure_mod, "make_operands",
+                        lambda scene, seed=0: (None, None))
+    import repro.kernels.ops as ops_mod
+    monkeypatch.setattr(ops_mod, "mg3m_conv_op", slow_op)
+    choice = tune.ranked_space(SC, top_k=1)[0]
+    t0 = time.perf_counter()
+    us = tune.measure_choice(SC, choice, warmup=100, iters=3,
+                             timeout_s=0.01)
+    elapsed = time.perf_counter() - t0
+    assert us == math.inf          # partial/expired warmup scores inf
+    assert len(calls) <= 2         # stopped early, not after 100 warmups
+    assert elapsed < 2.0
+
+
+def test_autotune_reuses_analytic_timing_on_clipped_key(tmp_path,
+                                                        monkeypatch):
+    """Regression: the analytic favorite's timing was matched by full-scene
+    blocks while measurements dedup on proxy-clipped keys, so an aliased
+    kernel got wall-clocked twice."""
+    from repro.tune import autotune as autotune_mod
+
+    big = ConvScene(B=128, IC=256, OC=512, inH=14, inW=14, fltH=3, fltW=3,
+                    padH=1, padW=1)
+    caps = dict(measure_batch=2, measure_max_ch=16, measure_max_hw=6)
+    msc = tune.proxy_scene(big, **caps)
+    real_analytic = select_schedule(big)
+    # An "analytic" favorite whose full blocks differ from every measured
+    # candidate but alias one of them once clipped to the proxy scene.
+    from dataclasses import replace
+    fake_analytic = replace(real_analytic,
+                            bm=max(real_analytic.bm, msc.M) + 8,
+                            bn=max(real_analytic.bn, msc.N) + 128,
+                            bk=max(real_analytic.bk, msc.K) + 8)
+    monkeypatch.setattr(autotune_mod, "select_schedule",
+                        lambda scene, *a, **k: fake_analytic)
+
+    measured = []
+    cache = tune.ScheduleCache(str(tmp_path / "c.json"))
+    t = tune.autotune_scene(big, cache=cache, top_k=16, **caps,
+                            measure_fn=lambda s, c: measured.append(c) or 1.0)
+    clipped = [(c.schedule, min(c.bm, msc.M), min(c.bn, msc.N),
+                min(c.bk, msc.K)) for c in measured]
+    assert len(clipped) == len(set(clipped)), \
+        "analytic favorite re-measured an already-clocked clipped kernel"
+    assert t.analytic_measured_us == 1.0
+
+
+# -- forced-schedule resolution --------------------------------------------
+# VMEM-oversized for TB11: the resident filter alone (9*512*512*4 B, double-
+# buffered) blows the 12 MiB budget at every candidate blocking.
+BIG_TB11_INFEASIBLE = ConvScene(B=256, IC=512, OC=512, inH=8, inW=8,
+                                fltH=3, fltW=3, padH=1, padW=1)
+
+
+def test_forced_infeasible_schedule_raises():
+    """Regression: select_schedule(allowed=("TB11",)) fell into the
+    best-is-None branch and silently returned a TB88 choice."""
+    with pytest.raises(ValueError, match="TB11"):
+        select_schedule(BIG_TB11_INFEASIBLE, allowed=("TB11",))
+    with pytest.raises(ValueError, match="TB11"):
+        resolve_choice(BIG_TB11_INFEASIBLE, "TB11")
+    # the unforced selector still works (TB88 escape hatch stays available)
+    assert select_schedule(BIG_TB11_INFEASIBLE).schedule in SCHEDULES
+
+
+def test_mg3m_conv_never_silently_substitutes_forced_schedule():
+    from repro.core.conv import mg3m_conv
+    inp, flt = tune.make_operands(BIG_TB11_INFEASIBLE)
+    with pytest.raises(ValueError, match="TB11"):
+        mg3m_conv(inp, flt, BIG_TB11_INFEASIBLE, schedule="TB11",
+                  interpret=True)
+
+
+def test_forced_feasible_schedule_still_honored():
+    for sched in SCHEDULES:
+        choice = resolve_choice(SC, sched)
+        assert choice.schedule == sched
+
+
+def test_ranked_space_restricted_schedules_never_substitute():
+    with pytest.raises(ValueError, match="TB11"):
+        tune.ranked_space(BIG_TB11_INFEASIBLE, schedules=("TB11",))
 
 
 # -- schedule="auto" dispatch ----------------------------------------------
