@@ -1,0 +1,62 @@
+"""Plan-amortized dispatch overhead: legacy per-call resolution vs
+plan-once / execute-many.
+
+For each scene the table wall-clocks (a) the legacy ``mg3m_conv_op`` shim,
+which re-runs schedule resolution and shape derivation on every call, and
+(b) ``plan.execute`` on a plan built once, which dispatches straight into
+the jitted kernel.  The difference is the per-call dispatch overhead a
+serving process amortizes away by warm-starting a ``PlanRegistry``.  Wall
+times follow the ``benchmarks/common.py`` honesty conventions (CPU-interpret,
+relative numbers).
+"""
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.scene import ConvScene
+from repro.kernels import ops
+from repro.plan import ConvOp, make_plan
+from repro.tune.measure import make_operands
+
+# Small scenes: interpret-mode kernel time stays low enough that the
+# per-call dispatch overhead is visible in the totals.
+_SCENES = {
+    "tiny": ConvScene(B=4, IC=8, OC=8, inH=6, inW=6, fltH=3, fltW=3,
+                      padH=1, padW=1),
+    "pointwise": ConvScene(B=8, IC=16, OC=16, inH=5, inW=5, fltH=1, fltW=1),
+    "strided": ConvScene(B=4, IC=8, OC=8, inH=8, inW=8, fltH=3, fltW=3,
+                         padH=1, padW=1, stdH=2, stdW=2),
+}
+
+
+def _time_us(fn, iters):
+    jax.block_until_ready(fn())      # warmup/compile outside the clock
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows(iters: int = 10):
+    out = []
+    for name, sc in _SCENES.items():
+        inp, flt = make_operands(sc)
+        plan = make_plan(sc, ConvOp.FPROP)          # plan-once, off the clock
+        legacy_us = _time_us(
+            lambda: ops.mg3m_conv_op(inp, flt, sc, interpret=True), iters)
+        plan_us = _time_us(lambda: plan.execute(inp, flt), iters)
+        out.append((
+            f"plan_{name}", plan_us,
+            f"legacy_per_call={legacy_us:.1f}us;"
+            f"dispatch_saving={legacy_us - plan_us:.1f}us;"
+            f"schedule={plan.schedule}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,7 @@ import json
 import os
 
 from benchmarks import (batch, calibration, channels, cnns, filters,
-                        granularity, padstride, tuned)
+                        granularity, padstride, plans, tuned)
 from benchmarks.common import emit
 
 
@@ -34,14 +34,21 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
                          "padstride,cnns,granularity,roofline,tuned,"
-                         "calibration")
+                         "calibration,plans")
+    ap.add_argument("--plan", action="store_true",
+                    help="also report plan-amortized dispatch overhead "
+                         "(plan-once execute vs legacy per-call resolution)")
     args = ap.parse_args()
     mods = {"channels": channels.rows, "batch": batch.rows,
             "filters": filters.rows, "padstride": padstride.rows,
             "cnns": cnns.rows, "granularity": granularity.rows,
             "roofline": roofline_rows, "tuned": tuned.rows,
-            "calibration": calibration.rows}
-    only = args.only.split(",") if args.only else list(mods)
+            "calibration": calibration.rows, "plans": plans.rows}
+    # the plans table is opt-in: --plan appends it, --only plans isolates it
+    only = args.only.split(",") if args.only else [m for m in mods
+                                                  if m != "plans"]
+    if args.plan and "plans" not in only:
+        only.append("plans")
     print("name,us_per_call,derived")
     for name in only:
         emit(mods[name]())

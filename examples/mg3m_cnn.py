@@ -1,6 +1,7 @@
 """Paper-faithful example: train a small CNN classifier whose every
-convolution runs through MG3MConv (multi-grained schedule auto-selected),
-on a synthetic 10-class image task.
+convolution runs through MG3MConv, with the per-layer execution plans
+(fprop + dgrad + wgrad, each through the multi-grained selector) built
+once before training starts.
 
     PYTHONPATH=src python examples/mg3m_cnn.py --steps 30
 """
@@ -10,9 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv import select_schedule
-from repro.core.scene import ConvScene
-from repro.models.cnn import init_small_cnn, small_cnn_forward
+from repro.models.cnn import init_small_cnn, small_cnn_forward, small_cnn_plans
 
 
 def make_data(key, n, res=16):
@@ -30,23 +29,30 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--res", type=int, default=16)
     ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--pallas", action="store_true",
+                    help="train through the Pallas plans (slow on CPU "
+                         "interpret mode; the default trains on the jnp "
+                         "reference)")
     args = ap.parse_args()
-
-    # show what the selector picks for this model's scenes
-    for name, (ic, oc, hw, std) in {
-        "c1": (3, 16, args.res, 1), "c2": (16, 32, args.res, 2),
-        "c3": (32, 64, args.res // 2, 2),
-    }.items():
-        sc = ConvScene(B=args.batch, IC=ic, OC=oc, inH=hw, inW=hw, fltH=3,
-                       fltW=3, padH=1, padW=1, stdH=std, stdW=std)
-        print(f"{name}: {select_schedule(sc).schedule} for {sc.describe()}")
 
     key = jax.random.PRNGKey(0)
     params = init_small_cnn(key)
+
+    # Plan every layer ONCE, all three directions; training then never
+    # re-runs schedule resolution.  (The jnp-reference training path below
+    # doesn't consume these plans, but a --pallas run would — and the table
+    # shows what the selector picked per layer and direction.)
+    plans = small_cnn_plans(params, args.batch, args.res)
+    for name, triple in plans.items():
+        print(f"{name}: fprop={triple.fprop.schedule} "
+              f"dgrad={triple.dgrad.schedule or 'jnp-ref'} "
+              f"wgrad={triple.wgrad.schedule or 'jnp-ref'} "
+              f"for {triple.scene.describe()}")
     xs, ys = make_data(jax.random.PRNGKey(1), 512, args.res)
 
     def loss_fn(p, x, y):
-        logits = small_cnn_forward(p, x)
+        logits = small_cnn_forward(p, x, use_pallas=args.pallas,
+                                   plans=plans if args.pallas else None)
         lp = jax.nn.log_softmax(logits)
         return -jnp.take_along_axis(lp, y[:, None], 1).mean()
 

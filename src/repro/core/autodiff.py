@@ -1,108 +1,128 @@
-"""Differentiable MG3MConv: custom_vjp so the Pallas forward kernel is
-trainable.
+"""Differentiable MG3MConv: custom_vjp built from ``repro.plan`` plans.
 
-The backward convolutions are themselves MG3M *scenes*:
-  * dIN  = conv(pad(dOUT), rot180(FLT) with IC/OC swapped)  — a fresh scene
-    whose granularity the selector picks independently (often a different
-    grain than the forward: dOUT has OC channels where IN had IC).
-  * dFLT[fh,fw,ic,oc] = sum_{oh,ow,b} IN[oh*s+fh-p, ow*s+fw-p, ic, b]
-                        * dOUT[oh,ow,oc,b]
-    — a "batch-contracted" MM_unit family, evaluated with the same fp32-
-    accumulated einsum the kernels use.
+All three directions are first-class plan ops (``ConvOp.FPROP`` /
+``DGRAD`` / ``WGRAD``): the backward convolutions are themselves MG3M
+*scenes* whose granularity the selector picks independently of the forward
+(dOUT has OC channels where IN had IC; wgrad contracts the batch dim).
+Scene derivation lives in ``repro.plan.build`` (``grad_input_scene`` /
+``grad_filter_scene``); strided forwards have no MG3M-expressible backward
+scene and their plans record ``uses_reference=True`` — visible metadata, not
+a buried comment.
 
-Strided forward convs fall back to the jnp reference for dIN (the dilated
-scatter has no clean MG3M scene); this is recorded, not hidden.
+Two APIs:
+
+  * ``make_training_plans`` + ``conv_with_plans``: plan-once / execute-many —
+    build the (fprop, dgrad, wgrad) triple per layer, then every training
+    step is pure dispatch (what ``models/cnn.py`` and the examples use);
+  * ``mg3m_conv_trainable``: the legacy per-call signature, now a thin shim
+    that fetches plans from the default ``PlanRegistry``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.mapping import ScheduleChoice
 from repro.core.scene import ConvScene
-from repro.kernels import ops as kops
-from repro.kernels import ref
-
-F32 = jnp.float32
+from repro.plan.build import ConvOp, ConvPlan, make_plan
+from repro.plan.registry import PlanRegistry, get_plan
 
 
-def _grad_input_scene(scene: ConvScene) -> ConvScene:
-    """The dIN convolution's scene (stride-1 forward only)."""
-    assert scene.stdH == 1 and scene.stdW == 1
-    return ConvScene(
-        B=scene.B, IC=scene.OC, OC=scene.IC,
-        inH=scene.outH, inW=scene.outW,
-        fltH=scene.fltH, fltW=scene.fltW,
-        padH=scene.fltH - 1 - scene.padH, padW=scene.fltW - 1 - scene.padW,
-        stdH=1, stdW=1, dtype=scene.dtype)
+@dataclasses.dataclass(frozen=True)
+class TrainingPlans:
+    """The (fprop, dgrad, wgrad) plan triple of one trainable conv layer."""
+
+    fprop: ConvPlan
+    dgrad: ConvPlan
+    wgrad: ConvPlan
+
+    @property
+    def scene(self) -> ConvScene:
+        return self.fprop.scene
+
+    @property
+    def uses_reference(self) -> bool:
+        """True when any direction bypasses Pallas (see each plan's notes)."""
+        return (self.fprop.uses_reference or self.dgrad.uses_reference
+                or self.wgrad.uses_reference)
+
+    def describe(self) -> str:
+        return " | ".join(p.describe() for p in (self.fprop, self.dgrad,
+                                                 self.wgrad))
 
 
+def make_training_plans(scene: ConvScene, *,
+                        policy: Union[None, str, ScheduleChoice] = "analytic",
+                        interpret: bool = True, use_pallas: bool = True,
+                        registry: Optional[PlanRegistry] = None
+                        ) -> TrainingPlans:
+    """Plan all three directions of one layer, each through the selector.
+
+    ``policy`` applies to fprop; the backward plans use "tuned" when fprop
+    does (their scenes get their own cache entries) and analytic selection
+    otherwise — a grain forced for the forward is *not* forced on the
+    backward scenes, whose best grain generally differs.
+    """
+    bwd_policy = "tuned" if policy in ("auto", "tuned") else "analytic"
+    kw = dict(interpret=interpret, use_pallas=use_pallas)
+    if registry is not None:
+        build = functools.partial(registry.get_or_build, scene, **kw)
+    else:
+        build = functools.partial(make_plan, scene, **kw)
+    return TrainingPlans(fprop=build(ConvOp.FPROP, policy=policy),
+                         dgrad=build(ConvOp.DGRAD, policy=bwd_policy),
+                         wgrad=build(ConvOp.WGRAD, policy=bwd_policy))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv_with_plans(inp: jax.Array, flt: jax.Array,
+                    plans: TrainingPlans) -> jax.Array:
+    """Differentiable convolution over a pre-built plan triple: every
+    direction is a zero-resolution dispatch."""
+    return plans.fprop.execute(inp, flt)
+
+
+def _fwd(inp, flt, plans):
+    return conv_with_plans(inp, flt, plans), (inp, flt)
+
+
+def _bwd(plans, residuals, d_out):
+    inp, flt = residuals
+    return plans.dgrad.execute(d_out, flt), plans.wgrad.execute(inp, d_out)
+
+
+conv_with_plans.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------
+# legacy per-call shims (signatures preserved)
+# --------------------------------------------------------------------------
 def grad_input(d_out: jax.Array, flt: jax.Array, scene: ConvScene, *,
                interpret: bool = True, use_pallas: bool = True) -> jax.Array:
-    """dL/dIN via a *forward* MG3MConv on the rotated, transposed filter."""
-    if scene.stdH != 1 or scene.stdW != 1:
-        # dilated-scatter case: jnp reference (documented fallback)
-        return _grad_input_ref(d_out, flt, scene)
-    gscene = _grad_input_scene(scene)
-    flt_rot = jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)   # rot180 + IC<->OC
-    return kops.mg3m_conv_op(d_out, flt_rot, gscene, interpret=interpret,
-                             use_pallas=use_pallas)
-
-
-def _grad_input_ref(d_out: jax.Array, flt: jax.Array, scene: ConvScene
-                    ) -> jax.Array:
-    """Exact adjoint via jax.vjp of the reference conv — conv is linear in
-    IN, so the primal point is irrelevant (zeros)."""
-    zero = jnp.zeros(scene.in_shape(), d_out.dtype)
-    _, vjp = jax.vjp(lambda i: ref.conv_ref(i, flt, scene), zero)
-    return vjp(d_out)[0]
+    """dL/dIN via the scene's DGRAD plan (jnp adjoint on strided forwards —
+    see the plan's ``uses_reference``/``notes``)."""
+    plan = get_plan(scene, ConvOp.DGRAD, interpret=interpret,
+                    use_pallas=use_pallas)
+    return plan.execute(d_out, flt)
 
 
 def grad_filter(inp: jax.Array, d_out: jax.Array, scene: ConvScene
                 ) -> jax.Array:
-    """dL/dFLT: batch+spatial-contracted MM_units (fp32 accumulation)."""
-    inp_p = jnp.pad(inp.astype(F32),
-                    ((scene.padH, scene.padH), (scene.padW, scene.padW),
-                     (0, 0), (0, 0)))
-    # window of IN aligned to each output pixel, per (fh, fw)
-    pieces = []
-    for fh in range(scene.fltH):
-        row = []
-        for fw in range(scene.fltW):
-            win = jax.lax.slice(
-                inp_p,
-                (fh, fw, 0, 0),
-                (fh + (scene.outH - 1) * scene.stdH + 1,
-                 fw + (scene.outW - 1) * scene.stdW + 1,
-                 scene.IC, scene.B),
-                (scene.stdH, scene.stdW, 1, 1))          # (outH,outW,IC,B)
-            g = jnp.einsum("hwib,hwob->io", win, d_out.astype(F32))
-            row.append(g)
-        pieces.append(jnp.stack(row))
-    return jnp.stack(pieces).astype(inp.dtype)           # (fh,fw,IC,OC)
+    """dL/dFLT via the scene's WGRAD plan (fp32-accumulated either way)."""
+    return get_plan(scene, ConvOp.WGRAD).execute(inp, d_out)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def mg3m_conv_trainable(inp: jax.Array, flt: jax.Array, scene: ConvScene,
                         schedule: Optional[str] = None,
                         interpret: bool = True) -> jax.Array:
-    """Differentiable MG3MConv — Pallas forward, MG3M-scene backward."""
-    return kops.mg3m_conv_op(inp, flt, scene, schedule=schedule,
-                             interpret=interpret)
+    """Differentiable MG3MConv — Pallas forward, MG3M-scene backward.
 
-
-def _fwd(inp, flt, scene, schedule, interpret):
-    out = mg3m_conv_trainable(inp, flt, scene, schedule, interpret)
-    return out, (inp, flt)
-
-
-def _bwd(scene, schedule, interpret, residuals, d_out):
-    inp, flt = residuals
-    d_in = grad_input(d_out, flt, scene, interpret=interpret)
-    d_flt = grad_filter(inp, d_out, scene)
-    return d_in, d_flt
-
-
-mg3m_conv_trainable.defvjp(_fwd, _bwd)
+    Legacy signature; plans come from the default ``PlanRegistry``, so
+    repeated calls on the same scene reuse the same frozen plans."""
+    from repro.plan.registry import default_registry
+    plans = make_training_plans(scene, policy=schedule, interpret=interpret,
+                                registry=default_registry())
+    return conv_with_plans(inp, flt, plans)

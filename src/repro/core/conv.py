@@ -1,4 +1,14 @@
-"""Public MG3MConv API — the paper's contribution as a composable JAX module."""
+"""Public MG3MConv API — the paper's contribution as a composable JAX module.
+
+Two usage modes:
+
+  * plan-once / execute-many (preferred for any repeated shape): build a
+    frozen ``ConvPlan`` via ``make_plan(scene, op, policy=...)`` — schedule
+    resolution, tune-cache IO, and padded-shape derivation run exactly once
+    — then call ``plan.execute`` per batch (see ``repro.plan``);
+  * the legacy per-call functions below, preserved as thin shims over the
+    same plan machinery.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,9 +19,13 @@ from repro.core.mapping import (ClassCorrection, CostModel, ScheduleChoice,
 from repro.core.scene import ConvScene
 from repro.kernels import ops, ref
 from repro.kernels.ops import ScheduleSpec
+from repro.plan import (ConvOp, ConvPlan, PlanRegistry, default_registry,
+                        get_plan, make_plan, set_default_registry)
 
 __all__ = ["ConvScene", "CostModel", "ClassCorrection", "ScheduleChoice",
            "ScheduleSpec", "select_schedule",
+           "ConvOp", "ConvPlan", "PlanRegistry", "make_plan", "get_plan",
+           "default_registry", "set_default_registry",
            "mg3m_conv", "mg3m_conv_nhwc", "mg3m_conv_trainable",
            "predicted_efficiency"]
 
@@ -30,7 +44,8 @@ def mg3m_conv(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
 
     ``schedule`` accepts None (analytic selection), "auto" (tuned-cache
     resolution with analytic fallback), a forced "TB11"/"TB18"/"TB88", or an
-    exact ScheduleChoice."""
+    exact ScheduleChoice.  Per-call shim — see ``make_plan`` to amortize
+    resolution over many executions."""
     return ops.mg3m_conv_op(inp, flt, scene, schedule=schedule,
                             interpret=interpret, use_pallas=use_pallas)
 
@@ -46,7 +61,10 @@ def mg3m_conv_nhwc(x: jax.Array, flt: jax.Array, *, stride=(1, 1),
     """
     b, h, w, c = x.shape
     fh, fw, ic, oc = flt.shape
-    assert ic == c, (ic, c)
+    if ic != c:
+        raise ValueError(
+            f"filter expects {ic} input channels but x has {c} "
+            f"(x {x.shape}, flt {flt.shape})")
     scene = ConvScene(B=b, IC=c, OC=oc, inH=h, inW=w, fltH=fh, fltW=fw,
                       padH=padding[0], padW=padding[1],
                       stdH=stride[0], stdW=stride[1], dtype=str(x.dtype))

@@ -44,6 +44,12 @@ class ConvScene:
             raise ValueError("stride must be positive")
         if self.padH < 0 or self.padW < 0:
             raise ValueError("padding must be non-negative")
+        try:
+            jnp.dtype(self.dtype)
+        except TypeError as e:
+            raise ValueError(
+                f"scene dtype {self.dtype!r} is not a valid dtype: {e}"
+            ) from e
         if self.outH <= 0 or self.outW <= 0:
             raise ValueError(f"empty output for scene {self}")
 

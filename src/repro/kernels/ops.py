@@ -1,71 +1,26 @@
 """Jit'd public wrappers around the MG3MConv Pallas kernels.
 
-Responsibilities (the paper's "CG-level" housekeeping, §4.1):
-  * spatial pre-padding (padH/padW) so kernels never see out-of-bounds reads;
-  * channel/batch alignment padding so grid blocks divide exactly (zero
-    padding is semantically inert for the K reduction and sliced off for
-    M/N) — the TPU analogue of the paper's 16 remainder-case kernels;
-  * schedule dispatch via the multi-grained selector.
+The convolution entry point is now a thin shim over ``repro.plan``: every
+call builds (or is handed) a frozen ``ConvPlan`` that owns schedule
+resolution, spatial pre-padding, and channel/batch alignment (the paper's
+"CG-level" housekeeping, §4.1 — the TPU analogue of its 16 remainder-case
+kernels).  The legacy per-call signature is preserved exactly, including its
+per-call resolution semantics — callers that want plan-once / execute-many
+amortization should build plans via ``repro.plan.make_plan`` /
+``PlanRegistry`` instead.
 """
 from __future__ import annotations
 
-import functools
 from typing import Union
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.mapping import ScheduleChoice, select_schedule
+from repro.core.mapping import ScheduleChoice
 from repro.core.scene import ConvScene, round_up
-from repro.kernels import mg3m_conv, ref
+from repro.plan import build as plan_build
+from repro.plan.build import _pad_axis
 
 ScheduleSpec = Union[None, str, ScheduleChoice]
-
-
-def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
-    cur = x.shape[axis]
-    if cur == to:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, to - cur)
-    return jnp.pad(x, pads)
-
-
-@functools.partial(jax.jit, static_argnames=("scene", "choice", "interpret"))
-def _mg3m_conv_impl(inp: jax.Array, flt: jax.Array, scene: ConvScene,
-                    choice: ScheduleChoice, interpret: bool) -> jax.Array:
-    # Spatial pre-padding (paper keeps pad handling outside the assembly kernel
-    # via the `if ih, iw exist` guard; zero-padding is the branch-free analogue).
-    inp_p = jnp.pad(inp, ((scene.padH, scene.padH), (scene.padW, scene.padW),
-                          (0, 0), (0, 0)))
-    m, n, k = scene.M, scene.N, scene.K
-    if choice.schedule == "TB11":
-        out = mg3m_conv.conv_tb11(inp_p, flt, scene, interpret=interpret)
-    elif choice.schedule == "TB18":
-        bm = min(choice.bm, m)
-        mp = round_up(m, bm)
-        flt_a = _pad_axis(flt, 3, mp)
-        out = mg3m_conv.conv_tb18(inp_p, flt_a, scene, bm=bm,
-                                  interpret=interpret)[:, :, :m, :]
-    else:  # TB88
-        bm, bn, bk = (min(choice.bm, m), min(choice.bn, n), min(choice.bk, k))
-        mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
-        inp_a = _pad_axis(_pad_axis(inp_p, 2, kp), 3, np_)
-        flt_a = _pad_axis(_pad_axis(flt, 2, kp), 3, mp)
-        out = mg3m_conv.conv_tb88(inp_a, flt_a, scene, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret)[:, :, :m, :n]
-    return out
-
-
-def _selection_cost_model():
-    """Cost model for selection: the calibrated one when an artifact (or an
-    explicitly-installed model) is present, else the analytic default.
-    Falls back silently — selection must work without the tune subsystem."""
-    try:
-        from repro.tune.calibrate import active_cost_model  # avoids cycle
-        return active_cost_model()
-    except Exception:  # noqa: BLE001 — any tune-side failure = analytic model
-        return None
 
 
 def resolve_choice(scene: ConvScene, schedule: ScheduleSpec,
@@ -74,28 +29,23 @@ def resolve_choice(scene: ConvScene, schedule: ScheduleSpec,
 
       None          multi-grained selection under the active cost model
                     (calibrated when an artifact exists, else roofline);
-      "auto"        tuned-cache lookup first, cost-model selection on miss —
+      "auto"        tuned-cache resolution with analytic fallback —
                     never measures on the hot path (see repro.tune);
       "TB11"/...    forced schedule, model-chosen blocks; raises if the
                     forced grain cannot fit VMEM (never substitutes another);
       ScheduleChoice  used exactly as given (the tuner's measurement path).
+
+    Delegates to ``repro.plan.build.resolve_policy`` — the same resolution a
+    ``ConvPlan`` runs once at build time.
     """
-    if isinstance(schedule, ScheduleChoice):
-        return schedule
-    if schedule == "auto":
-        from repro.tune.autotune import resolve_schedule  # avoids cycle
-        return resolve_schedule(scene, interpret=interpret)
-    if schedule is None:
-        return select_schedule(scene, model=_selection_cost_model())
-    return select_schedule(scene, allowed=(schedule,),
-                           model=_selection_cost_model())
+    return plan_build.resolve_policy(scene, schedule, interpret)
 
 
 def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
                  schedule: ScheduleSpec = None,
                  interpret: bool = True,
                  use_pallas: bool = True) -> jax.Array:
-    """Multi-grained convolution in the paper's layouts.
+    """Multi-grained convolution in the paper's layouts (per-call shim).
 
     Args:
       inp: [inH, inW, IC, B]; flt: [fltH, fltW, IC, OC].
@@ -107,20 +57,30 @@ def mg3m_conv_op(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
       use_pallas: False routes to the pure-jnp reference (used by the
         distributed model code on CPU-only dry-runs).
     Returns: [outH, outW, OC, B].
+
+    Resolution runs on *every* call (the legacy contract — ``schedule="auto"``
+    callers observe a tune-cache consultation per call).  Build a plan once
+    with ``repro.plan.make_plan`` to amortize it.
     """
-    assert inp.shape == scene.in_shape(), (inp.shape, scene.in_shape())
-    assert flt.shape == scene.flt_shape(), (flt.shape, scene.flt_shape())
-    if not use_pallas:
-        return ref.conv_ref(inp, flt, scene)
-    choice = resolve_choice(scene, schedule, interpret)
-    return _mg3m_conv_impl(inp, flt, scene, choice, interpret)
+    if inp.shape != scene.in_shape():
+        raise ValueError(
+            f"input shape {inp.shape} does not match the scene's IN layout "
+            f"{scene.in_shape()} for {scene.describe()}")
+    if flt.shape != scene.flt_shape():
+        raise ValueError(
+            f"filter shape {flt.shape} does not match the scene's FLT layout "
+            f"{scene.flt_shape()} for {scene.describe()}")
+    plan = plan_build.make_plan(scene, plan_build.ConvOp.FPROP,
+                                policy=schedule, interpret=interpret,
+                                use_pallas=use_pallas)
+    return plan.execute(inp, flt)
 
 
 def causal_conv1d_op(x: jax.Array, w: jax.Array, *, block_l: int = 256,
                      block_d: int = 256, interpret: bool = True,
                      use_pallas: bool = True) -> jax.Array:
     """Depthwise causal conv1d (Mamba2's conv) — see kernels/causal_conv1d.py."""
-    from repro.kernels import causal_conv1d
+    from repro.kernels import causal_conv1d, ref
     if not use_pallas:
         return ref.causal_conv1d_ref(x, w)
     b, l, d = x.shape

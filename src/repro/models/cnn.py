@@ -85,30 +85,61 @@ def init_small_cnn(key, *, in_ch: int = 3, n_classes: int = 10,
     }
 
 
+_LAYER_STRIDES = {"c1": 1, "c2": 2, "c3": 2}
+
+
+def small_cnn_scenes(p: Params, batch: int, res: int,
+                     dtype: str = "float32") -> Dict[str, ConvScene]:
+    """Per-layer ConvScenes of the small CNN for a given input geometry."""
+    scenes = {}
+    hw = res
+    for name, stride in _LAYER_STRIDES.items():
+        w = p[name]
+        scenes[name] = ConvScene(B=batch, IC=w.shape[2], OC=w.shape[3],
+                                 inH=hw, inW=hw, fltH=w.shape[0],
+                                 fltW=w.shape[1], padH=1, padW=1,
+                                 stdH=stride, stdW=stride, dtype=dtype)
+        hw = scenes[name].outH
+    return scenes
+
+
+def small_cnn_plans(p: Params, batch: int, res: int, *,
+                    dtype: str = "float32", policy=None,
+                    interpret: bool = True) -> Dict[str, "TrainingPlans"]:
+    """Pre-build the (fprop, dgrad, wgrad) plan triple of every layer —
+    plan-once, then every forward/backward step is pure dispatch."""
+    from repro.core.autodiff import make_training_plans
+    from repro.plan import default_registry
+    return {name: make_training_plans(sc, policy=policy, interpret=interpret,
+                                      registry=default_registry())
+            for name, sc in small_cnn_scenes(p, batch, res, dtype).items()}
+
+
 def small_cnn_forward(p: Params, x: jax.Array, *, use_pallas: bool = False,
-                      schedule=None) -> jax.Array:
+                      schedule=None, plans=None) -> jax.Array:
     """x: [B, H, W, C] -> logits [B, n_classes].  All convs via MG3MConv.
 
-    use_pallas=True routes through the differentiable kernel path
-    (core/autodiff.mg3m_conv_trainable) so the whole CNN trains through the
-    Pallas forward."""
-    from repro.core.autodiff import mg3m_conv_trainable
-    from repro.core.scene import ConvScene
+    use_pallas=True routes through the differentiable plan path
+    (core/autodiff.conv_with_plans) so the whole CNN trains through the
+    Pallas forward.  Pass ``plans`` (from ``small_cnn_plans``) to use
+    pre-built per-layer plans; otherwise they are fetched from the default
+    PlanRegistry on first use."""
+    from repro.core.autodiff import conv_with_plans
 
-    def conv(x, w, stride):
+    if plans is None and use_pallas:
+        plans = small_cnn_plans(p, x.shape[0], x.shape[1],
+                                dtype=str(x.dtype), policy=schedule)
+
+    def conv(x, name, stride):
+        w = p[name]
         if not use_pallas:
             return mg3m_conv_nhwc(x, w, stride=(stride, stride),
                                   padding=(1, 1), schedule=schedule,
                                   use_pallas=False)
-        b, hh, ww, c = x.shape
-        sc = ConvScene(B=b, IC=c, OC=w.shape[3], inH=hh, inW=ww,
-                       fltH=w.shape[0], fltW=w.shape[1], padH=1, padW=1,
-                       stdH=stride, stdW=stride, dtype=str(x.dtype))
-        out = mg3m_conv_trainable(jnp.transpose(x, (1, 2, 3, 0)), w, sc,
-                                  schedule)
+        out = conv_with_plans(jnp.transpose(x, (1, 2, 3, 0)), w, plans[name])
         return jnp.transpose(out, (3, 0, 1, 2))
-    x = jax.nn.relu(conv(x, p["c1"], 1))
-    x = jax.nn.relu(conv(x, p["c2"], 2))
-    x = jax.nn.relu(conv(x, p["c3"], 2))
+    x = jax.nn.relu(conv(x, "c1", 1))
+    x = jax.nn.relu(conv(x, "c2", 2))
+    x = jax.nn.relu(conv(x, "c3", 2))
     x = x.mean(axis=(1, 2))                       # global average pool
     return x @ p["head"]

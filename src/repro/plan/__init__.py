@@ -1,0 +1,28 @@
+"""repro.plan — plan-once / execute-many convolution operator API.
+
+The paper's multi-grained selection is per-*scene*, not per-*call*:
+``make_plan(scene, op, policy=...)`` runs schedule resolution exactly once
+(analytic roofline / calibrated model, tuned-cache, or a forced grain),
+derives the backward scenes for DGRAD/WGRAD through the same selector, and
+precomputes every padded/aligned shape into a frozen, jit-stable
+``ConvPlan``; ``plan.execute(a, b)`` then performs zero resolutions, zero
+tune-cache IO, and zero shape arithmetic per call.  ``PlanRegistry`` keeps a
+process-level, LRU-bounded, JSON-serializable repository of plans so serving
+and benchmarks can warm-start.
+"""
+from repro.plan.build import (ConvOp, ConvPlan, ExecSpec, assemble_plan,
+                              derive_exec_spec, grad_filter_scene,
+                              grad_input_scene, make_plan, policy_tag,
+                              resolve_policy)
+from repro.plan.registry import (PLAN_VERSION, PlanRegistry, default_registry,
+                                 get_plan, plan_from_dict, plan_signature,
+                                 plan_to_dict, set_default_registry)
+
+__all__ = [
+    "ConvOp", "ConvPlan", "ExecSpec", "assemble_plan", "derive_exec_spec",
+    "grad_filter_scene", "grad_input_scene", "make_plan", "policy_tag",
+    "resolve_policy",
+    "PLAN_VERSION", "PlanRegistry", "default_registry", "get_plan",
+    "plan_from_dict", "plan_signature", "plan_to_dict",
+    "set_default_registry",
+]

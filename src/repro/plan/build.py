@@ -1,0 +1,421 @@
+"""Plan construction — schedule resolution, backward-scene derivation, and
+padded-shape precomputation, all performed exactly once per plan.
+
+The plan-once / execute-many contract (cuDNN's find-then-execute descriptor
+model, on MG3M terms):
+
+  * ``make_plan(scene, op, policy=...)`` runs the multi-grained selector
+    once (``policy``: analytic roofline, tuned-cache resolution, or a forced
+    grain), derives every padded/aligned shape and slice extent into a
+    frozen ``ExecSpec``, and — for the backward ops — derives the backward
+    convolution's own ``ConvScene`` so dgrad and wgrad go through the same
+    selector as fprop;
+  * ``ConvPlan.execute(a, b)`` dispatches straight into the Pallas kernels
+    with the precomputed spec: zero schedule resolutions, zero tune-cache
+    IO, zero shape arithmetic per call.
+
+Backward ops as scenes (the selector owns all three directions):
+
+  DGRAD  dIN = conv(dOUT, rot180(FLT) with IC/OC swapped) — a fresh scene
+         with B'=B, IC'=OC, OC'=IC over dOUT's spatial dims.  Strided
+         forwards have no clean MG3M scene (the adjoint is a dilated
+         scatter): the plan records ``uses_reference=True`` and executes
+         the exact jnp adjoint instead — visible metadata, not a comment.
+  WGRAD  dFLT[fh,fw,ic,oc] = sum_{oh,ow,b} IN[fh+oh, fw+ow, ic, b]
+         * dOUT[oh,ow,oc,b] (stride 1) *is* a convolution with the batch
+         dim contracted: input IN with (B, IC) swapped, filter dOUT with
+         (B, OC) swapped, scene B'=IC, IC'=B, OC'=OC, filter spatial
+         outHxoutW.  Strided forwards dilate the taps — reference fallback,
+         recorded the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import ScheduleChoice, select_schedule
+from repro.core.scene import ConvScene, round_up
+from repro.kernels import mg3m_conv as kernels
+from repro.kernels import ref
+
+PolicySpec = Union[None, str, ScheduleChoice]
+
+
+class ConvOp(enum.Enum):
+    """The three convolution directions a plan can execute."""
+
+    FPROP = "fprop"   # execute(inp, flt)   -> out
+    DGRAD = "dgrad"   # execute(d_out, flt) -> d_in
+    WGRAD = "wgrad"   # execute(inp, d_out) -> d_flt
+
+
+# --------------------------------------------------------------------------
+# policy resolution (once per plan)
+# --------------------------------------------------------------------------
+def _active_cost_model():
+    """Calibrated cost model when an artifact (or explicitly-installed model)
+    exists, else None = analytic default.  Silent fallback — selection must
+    work without the tune subsystem."""
+    try:
+        from repro.tune.calibrate import active_cost_model  # avoids cycle
+        return active_cost_model()
+    except Exception:  # noqa: BLE001 — any tune-side failure = analytic model
+        return None
+
+
+def policy_tag(policy: PolicySpec) -> str:
+    """Canonical policy label (registry keys, plan metadata).  Idempotent:
+    an already-canonical tag (e.g. a plan's own ``.policy``) maps to itself."""
+    if isinstance(policy, ScheduleChoice):
+        return (f"forced:{policy.schedule}"
+                f"@{policy.bm}/{policy.bn}/{policy.bk}")
+    if policy in (None, "analytic"):
+        return "analytic"
+    if policy in ("auto", "tuned"):
+        return "tuned"
+    if isinstance(policy, str) and policy.startswith("forced:"):
+        return policy
+    return f"forced:{policy}"
+
+
+def resolve_policy(scene: ConvScene, policy: PolicySpec,
+                   interpret: bool = True) -> ScheduleChoice:
+    """One-time schedule resolution for a plan (and the legacy per-call path).
+
+      None / "analytic"   multi-grained selection under the active cost model
+                          (calibrated when an artifact exists, else roofline);
+      "auto" / "tuned"    tuned-cache lookup first, cost-model selection on
+                          miss — never measures (see repro.tune);
+      "TB11"/"TB18"/"TB88"  forced schedule, model-chosen blocks; raises if
+                          the forced grain cannot fit VMEM;
+      ScheduleChoice      used exactly as given (the tuner's measurement path).
+    """
+    if isinstance(policy, ScheduleChoice):
+        return policy
+    if policy in ("auto", "tuned"):
+        from repro.tune.autotune import resolve_schedule  # avoids cycle
+        return resolve_schedule(scene, interpret=interpret)
+    if policy in (None, "analytic"):
+        return select_schedule(scene, model=_active_cost_model())
+    return select_schedule(scene, allowed=(policy,),
+                           model=_active_cost_model())
+
+
+# --------------------------------------------------------------------------
+# padded/aligned shape derivation (once per plan)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Everything ``execute`` needs, precomputed: clipped blocks, spatial
+    pre-padding, channel/batch alignment targets, slice-back extents."""
+
+    schedule: str
+    bm: int                # clipped blocks actually passed to the kernel
+    bn: int
+    bk: int
+    pad_h: int             # spatial pre-padding (scene padH/padW)
+    pad_w: int
+    mp: int                # aligned OC target (flt minor-dim padding)
+    np_: int               # aligned B target (in minor-dim padding)
+    kp: int                # aligned IC target (reduction-dim padding)
+    m: int                 # slice-back extents of the true output
+    n: int
+
+
+def derive_exec_spec(scene: ConvScene, choice: ScheduleChoice) -> ExecSpec:
+    """Precompute every padded/aligned dim the kernel dispatch needs —
+    the per-call shape arithmetic of the legacy path, done once."""
+    m, n, k = scene.M, scene.N, scene.K
+    if choice.schedule == "TB11":
+        return ExecSpec("TB11", m, n, k, scene.padH, scene.padW, m, n, k, m, n)
+    if choice.schedule == "TB18":
+        bm = min(choice.bm, m)
+        return ExecSpec("TB18", bm, n, k, scene.padH, scene.padW,
+                        round_up(m, bm), n, k, m, n)
+    bm, bn, bk = min(choice.bm, m), min(choice.bn, n), min(choice.bk, k)
+    return ExecSpec("TB88", bm, bn, bk, scene.padH, scene.padW,
+                    round_up(m, bm), round_up(n, bn), round_up(k, bk), m, n)
+
+
+# --------------------------------------------------------------------------
+# backward-scene derivation
+# --------------------------------------------------------------------------
+def grad_input_scene(scene: ConvScene) -> ConvScene:
+    """The dIN convolution's scene: conv of dOUT with the rotated,
+    IC/OC-swapped filter.  Raises ``ValueError`` when the forward has no
+    MG3M-expressible adjoint (strided, or padding exceeding flt-1)."""
+    why = _dgrad_blocker(scene)
+    if why:
+        raise ValueError(f"dgrad of {scene.describe()} has no MG3M scene: {why}")
+    return ConvScene(
+        B=scene.B, IC=scene.OC, OC=scene.IC,
+        inH=scene.outH, inW=scene.outW,
+        fltH=scene.fltH, fltW=scene.fltW,
+        padH=scene.fltH - 1 - scene.padH, padW=scene.fltW - 1 - scene.padW,
+        stdH=1, stdW=1, dtype=scene.dtype)
+
+
+def grad_filter_scene(scene: ConvScene) -> ConvScene:
+    """The dFLT convolution's scene: batch-contracted conv with filter
+    spatial = outHxoutW (stride-1 forwards only; strided taps dilate)."""
+    why = _wgrad_blocker(scene)
+    if why:
+        raise ValueError(f"wgrad of {scene.describe()} has no MG3M scene: {why}")
+    return ConvScene(
+        B=scene.IC, IC=scene.B, OC=scene.OC,
+        inH=scene.inH, inW=scene.inW,
+        fltH=scene.outH, fltW=scene.outW,
+        padH=scene.padH, padW=scene.padW,
+        stdH=1, stdW=1, dtype=scene.dtype)
+
+
+def _dgrad_blocker(scene: ConvScene) -> Optional[str]:
+    if scene.stdH != 1 or scene.stdW != 1:
+        return ("strided forward: the adjoint is a dilated scatter "
+                "(no clean MG3M scene)")
+    if scene.padH > scene.fltH - 1 or scene.padW > scene.fltW - 1:
+        return "padding exceeds filter-1: adjoint padding would be negative"
+    return None
+
+
+def _wgrad_blocker(scene: ConvScene) -> Optional[str]:
+    if scene.stdH != 1 or scene.stdW != 1:
+        return ("strided forward: filter taps are stride-dilated "
+                "(no clean MG3M scene)")
+    return None
+
+
+# --------------------------------------------------------------------------
+# executors — jitted on the frozen (scene, spec); no per-call derivation
+# --------------------------------------------------------------------------
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    cur = x.shape[axis]
+    if cur == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - cur)
+    return jnp.pad(x, pads)
+
+
+def _conv_body(inp: jax.Array, flt: jax.Array, scene: ConvScene,
+               spec: ExecSpec, interpret: bool) -> jax.Array:
+    """Kernel dispatch from a precomputed spec (no shape arithmetic here)."""
+    inp_p = jnp.pad(inp, ((spec.pad_h, spec.pad_h), (spec.pad_w, spec.pad_w),
+                          (0, 0), (0, 0)))
+    if spec.schedule == "TB11":
+        return kernels.conv_tb11(inp_p, flt, scene, interpret=interpret)
+    if spec.schedule == "TB18":
+        flt_a = _pad_axis(flt, 3, spec.mp)
+        return kernels.conv_tb18(inp_p, flt_a, scene, bm=spec.bm,
+                                 interpret=interpret)[:, :, :spec.m, :]
+    inp_a = _pad_axis(_pad_axis(inp_p, 2, spec.kp), 3, spec.np_)
+    flt_a = _pad_axis(_pad_axis(flt, 2, spec.kp), 3, spec.mp)
+    return kernels.conv_tb88(inp_a, flt_a, scene, bm=spec.bm, bn=spec.bn,
+                             bk=spec.bk,
+                             interpret=interpret)[:, :, :spec.m, :spec.n]
+
+
+@functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
+def _exec_fprop(inp, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
+    return _conv_body(inp, flt, scene, spec, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
+def _exec_dgrad(d_out, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
+    # scene/spec here describe the *dgrad* scene (grad_input_scene).
+    flt_rot = jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)   # rot180 + IC<->OC
+    return _conv_body(d_out, flt_rot, scene, spec, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
+def _exec_wgrad(inp, d_out, scene: ConvScene, spec: ExecSpec, interpret: bool):
+    # scene/spec describe the *wgrad* scene (grad_filter_scene): input with
+    # (IC, B) swapped, filter = dOUT with (OC, B) swapped, output
+    # [fltH, fltW, OC, IC] transposed back to the FLT layout.
+    out = _conv_body(inp.swapaxes(2, 3), d_out.swapaxes(2, 3), scene, spec,
+                     interpret)
+    return out.transpose(0, 1, 3, 2)
+
+
+# Reference executors (use_pallas=False and the recorded fallbacks).
+@functools.partial(jax.jit, static_argnames=("scene",))
+def _ref_fprop(inp, flt, scene: ConvScene):
+    return ref.conv_ref(inp, flt, scene)
+
+
+@functools.partial(jax.jit, static_argnames=("scene",))
+def _ref_dgrad(d_out, flt, scene: ConvScene):
+    """Exact adjoint via jax.vjp of the reference conv — conv is linear in
+    IN, so the primal point is irrelevant (zeros)."""
+    zero = jnp.zeros(scene.in_shape(), d_out.dtype)
+    _, vjp = jax.vjp(lambda i: ref.conv_ref(i, flt, scene), zero)
+    return vjp(d_out)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("scene",))
+def _ref_wgrad(inp, d_out, scene: ConvScene):
+    """dL/dFLT: batch+spatial-contracted MM_units (fp32 accumulation)."""
+    f32 = jnp.float32
+    inp_p = jnp.pad(inp.astype(f32),
+                    ((scene.padH, scene.padH), (scene.padW, scene.padW),
+                     (0, 0), (0, 0)))
+    pieces = []
+    for fh in range(scene.fltH):
+        row = []
+        for fw in range(scene.fltW):
+            win = jax.lax.slice(
+                inp_p,
+                (fh, fw, 0, 0),
+                (fh + (scene.outH - 1) * scene.stdH + 1,
+                 fw + (scene.outW - 1) * scene.stdW + 1,
+                 scene.IC, scene.B),
+                (scene.stdH, scene.stdW, 1, 1))          # (outH,outW,IC,B)
+            row.append(jnp.einsum("hwib,hwob->io", win, d_out.astype(f32)))
+        pieces.append(jnp.stack(row))
+    return jnp.stack(pieces).astype(inp.dtype)           # (fh,fw,IC,OC)
+
+
+# --------------------------------------------------------------------------
+# the plan
+# --------------------------------------------------------------------------
+# (arg-a shape, arg-b shape, result shape) accessors per op, on the fwd scene
+_IO_SHAPES = {
+    ConvOp.FPROP: ("in_shape", "flt_shape", "out_shape"),
+    ConvOp.DGRAD: ("out_shape", "flt_shape", "in_shape"),
+    ConvOp.WGRAD: ("in_shape", "out_shape", "flt_shape"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Frozen, executable convolution plan for one (scene, op, policy).
+
+    All selection and shape work happened in ``make_plan``; ``execute`` is a
+    pure dispatch into a jitted kernel call.  ``uses_reference`` + ``notes``
+    surface when the plan bypasses Pallas (strided-backward fallbacks,
+    ``use_pallas=False``) — metadata, not buried comments.
+    """
+
+    scene: ConvScene                    # the *forward* scene the plan serves
+    op: ConvOp
+    policy: str                         # canonical tag (see ``policy_tag``)
+    interpret: bool
+    use_pallas: bool
+    uses_reference: bool
+    notes: Tuple[str, ...] = ()
+    exec_scene: Optional[ConvScene] = None   # scene actually dispatched
+    choice: Optional[ScheduleChoice] = None  # None on reference plans
+    spec: Optional[ExecSpec] = None
+
+    # -- execution ---------------------------------------------------------
+    def execute(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Run the planned op: (inp, flt) for FPROP, (d_out, flt) for DGRAD,
+        (inp, d_out) for WGRAD."""
+        a_shape, b_shape, _ = self.io_shapes()
+        if a.shape != a_shape or b.shape != b_shape:
+            raise ValueError(
+                f"{self.op.value} plan for {self.scene.describe()} expects "
+                f"operands {a_shape} x {b_shape}, got {a.shape} x {b.shape}")
+        if self.uses_reference:
+            fn = {ConvOp.FPROP: _ref_fprop, ConvOp.DGRAD: _ref_dgrad,
+                  ConvOp.WGRAD: _ref_wgrad}[self.op]
+            return fn(a, b, self.scene)
+        fn = {ConvOp.FPROP: _exec_fprop, ConvOp.DGRAD: _exec_dgrad,
+              ConvOp.WGRAD: _exec_wgrad}[self.op]
+        return fn(a, b, self.exec_scene, self.spec, self.interpret)
+
+    __call__ = execute
+
+    # -- introspection -----------------------------------------------------
+    def io_shapes(self) -> Tuple[Tuple[int, ...], Tuple[int, ...],
+                                 Tuple[int, ...]]:
+        """(arg-a shape, arg-b shape, result shape) of ``execute``."""
+        names = _IO_SHAPES[self.op]
+        return tuple(getattr(self.scene, nm)() for nm in names)
+
+    @property
+    def schedule(self) -> Optional[str]:
+        return self.choice.schedule if self.choice else None
+
+    def describe(self) -> str:
+        how = ("jnp-reference" if self.uses_reference else
+               f"{self.choice.schedule}"
+               f"({self.spec.bm}/{self.spec.bn}/{self.spec.bk})")
+        return (f"plan({self.op.value} {how} policy={self.policy} "
+                f"{self.scene.describe()})")
+
+
+def make_plan(scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
+              policy: PolicySpec = "analytic", interpret: bool = True,
+              use_pallas: bool = True) -> ConvPlan:
+    """Build a frozen ``ConvPlan``: resolve the schedule once, derive the
+    backward scene (DGRAD/WGRAD), precompute every padded/aligned shape.
+
+    ``policy``: "analytic" (roofline/calibrated selection), "tuned"
+    (schedule-cache resolution, analytic on miss), a forced "TB11"/"TB18"/
+    "TB88", or an exact ``ScheduleChoice``.  The legacy spellings ``None``
+    and ``"auto"`` alias "analytic" and "tuned".
+    """
+    op = ConvOp(op)
+    notes = []
+    uses_reference = not use_pallas
+    if not use_pallas:
+        notes.append(f"{op.value}: use_pallas=False; jnp reference")
+
+    exec_scene: Optional[ConvScene] = scene if op is ConvOp.FPROP else None
+    if op is ConvOp.DGRAD:
+        why = _dgrad_blocker(scene)
+        if why is None:
+            exec_scene = grad_input_scene(scene)
+        elif use_pallas:
+            uses_reference = True
+            notes.append(f"dgrad: {why}; exact jnp adjoint instead of Pallas")
+    elif op is ConvOp.WGRAD:
+        why = _wgrad_blocker(scene)
+        if why is None:
+            exec_scene = grad_filter_scene(scene)
+        elif use_pallas:
+            uses_reference = True
+            notes.append(f"wgrad: {why}; fp32 jnp einsum instead of Pallas")
+
+    choice = spec = None
+    if not uses_reference:
+        choice = resolve_policy(exec_scene, policy, interpret)
+        spec = derive_exec_spec(exec_scene, choice)
+    return ConvPlan(scene=scene, op=op, policy=policy_tag(policy),
+                    interpret=interpret, use_pallas=use_pallas,
+                    uses_reference=uses_reference, notes=tuple(notes),
+                    exec_scene=None if uses_reference else exec_scene,
+                    choice=choice, spec=spec)
+
+
+def assemble_plan(scene: ConvScene, op: Union[ConvOp, str], policy: str,
+                  choice: Optional[ScheduleChoice], *, interpret: bool = True,
+                  use_pallas: bool = True) -> ConvPlan:
+    """Rebuild a plan from a stored (scene, op, policy-tag, choice) without
+    re-running resolution — the registry's deserialization path.  A stored
+    choice is pinned exactly; a stored reference plan stays a reference
+    plan.  Raises ``ValueError`` when the stored choice no longer matches
+    what the op can execute (e.g. a Pallas choice for a strided dgrad)."""
+    op = ConvOp(op)
+    if choice is None:
+        plan = make_plan(scene, op, policy="analytic", interpret=interpret,
+                         use_pallas=use_pallas)
+        if not plan.uses_reference:
+            raise ValueError(
+                f"stored {op.value} plan for {scene.describe()} has no "
+                f"schedule choice but the op does not require a reference "
+                f"fallback")
+        return dataclasses.replace(plan, policy=policy)
+    plan = make_plan(scene, op, policy=choice, interpret=interpret,
+                     use_pallas=use_pallas)
+    if plan.uses_reference:
+        raise ValueError(
+            f"stored {op.value} plan for {scene.describe()} pins "
+            f"{choice.schedule} but the op requires a reference fallback")
+    return dataclasses.replace(plan, policy=policy)

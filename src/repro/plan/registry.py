@@ -1,0 +1,214 @@
+"""Process-level plan repository — plan-once, execute-many, serve-forever.
+
+``PlanRegistry`` memoizes frozen ``ConvPlan``s under a canonical signature
+(scene dims + dtype + op + policy + interpret + use_pallas), with the same
+conventions as the tune subsystem's schedule cache: hit/miss counters,
+bounded LRU eviction, and a versioned JSON artifact (atomic tmp+rename
+``save``, merge-on-``load``) so serving processes and benchmarks can
+warm-start a plan repository the way ``repro.tune`` warm-starts schedule
+selection.  Loading never re-runs schedule resolution: stored choices are
+pinned exactly (``build.assemble_plan``).
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.scene import ConvScene
+from repro.plan.build import (ConvOp, ConvPlan, PolicySpec, assemble_plan,
+                              make_plan, policy_tag)
+from repro.tune.cache import choice_from_dict, choice_to_dict
+
+# Bump when plan semantics / the artifact layout change meaning.
+PLAN_VERSION = "mg3m-plan-v1"
+_SCHEMA = 1
+
+_SCENE_FIELDS = ("B", "IC", "OC", "inH", "inW", "fltH", "fltW",
+                 "padH", "padW", "stdH", "stdW", "dtype")
+
+
+def plan_signature(scene: ConvScene, op: Union[ConvOp, str],
+                   policy: PolicySpec, interpret: bool,
+                   use_pallas: bool) -> str:
+    """Canonical registry key.  Dtype-alias-stable (via numpy dtype names)
+    and explicit about everything that changes the executable."""
+    dt = jnp.dtype(scene.dtype).name
+    return (f"v={PLAN_VERSION}|op={ConvOp(op).value}|pol={policy_tag(policy)}"
+            f"|int={int(interpret)}|pl={int(use_pallas)}|dt={dt}"
+            f"|B={scene.B}|IC={scene.IC}|OC={scene.OC}"
+            f"|in={scene.inH}x{scene.inW}|flt={scene.fltH}x{scene.fltW}"
+            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}")
+
+
+def plan_to_dict(plan: ConvPlan) -> Dict:
+    return {
+        "scene": {f: getattr(plan.scene, f) for f in _SCENE_FIELDS},
+        "op": plan.op.value,
+        "policy": plan.policy,
+        "interpret": plan.interpret,
+        "use_pallas": plan.use_pallas,
+        "uses_reference": plan.uses_reference,
+        "notes": list(plan.notes),
+        "choice": choice_to_dict(plan.choice) if plan.choice else None,
+    }
+
+
+def plan_from_dict(d: Dict) -> ConvPlan:
+    """Rebuild a plan from its artifact entry — no schedule resolution."""
+    scene = ConvScene(**d["scene"])
+    choice = choice_from_dict(d["choice"]) if d.get("choice") else None
+    return assemble_plan(scene, d["op"], d["policy"], choice,
+                         interpret=bool(d.get("interpret", True)),
+                         use_pallas=bool(d.get("use_pallas", True)))
+
+
+class PlanRegistry:
+    """LRU-bounded map: plan signature -> frozen ``ConvPlan``."""
+
+    def __init__(self, *, max_plans: int = 1024):
+        self.max_plans = max_plans
+        self._mem: "collections.OrderedDict[str, ConvPlan]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+    def key(self, scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP,
+            policy: PolicySpec = "analytic", interpret: bool = True,
+            use_pallas: bool = True) -> str:
+        return plan_signature(scene, op, policy, interpret, use_pallas)
+
+    # -- lookup ------------------------------------------------------------
+    def get(self, scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
+            policy: PolicySpec = "analytic", interpret: bool = True,
+            use_pallas: bool = True) -> Optional[ConvPlan]:
+        """Registered plan, or None on miss (LRU-touching)."""
+        k = self.key(scene, op, policy, interpret, use_pallas)
+        plan = self._mem.get(k)
+        if plan is None:
+            self.misses += 1
+            return None
+        self._mem.move_to_end(k)
+        self.hits += 1
+        return plan
+
+    def put(self, plan: ConvPlan) -> str:
+        k = plan_signature(plan.scene, plan.op, plan.policy, plan.interpret,
+                           plan.use_pallas)
+        self._mem[k] = plan
+        self._mem.move_to_end(k)
+        self._evict()
+        return k
+
+    def get_or_build(self, scene: ConvScene,
+                     op: Union[ConvOp, str] = ConvOp.FPROP, *,
+                     policy: PolicySpec = "analytic", interpret: bool = True,
+                     use_pallas: bool = True) -> ConvPlan:
+        """The plan-once entry: registry hit, or ``make_plan`` + register."""
+        plan = self.get(scene, op, policy=policy, interpret=interpret,
+                        use_pallas=use_pallas)
+        if plan is None:
+            plan = make_plan(scene, op, policy=policy, interpret=interpret,
+                             use_pallas=use_pallas)
+            self.put(plan)
+        return plan
+
+    def _evict(self) -> None:
+        while len(self._mem) > self.max_plans:
+            self._mem.popitem(last=False)  # least-recently used
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._mem.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {"size": len(self._mem), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
+
+    def plans(self) -> Dict[str, ConvPlan]:
+        """Snapshot of signature -> plan."""
+        return dict(self._mem)
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the registry as a versioned JSON artifact (atomic)."""
+        p = os.path.abspath(os.path.expanduser(path))
+        doc = {"schema": _SCHEMA, "version": PLAN_VERSION,
+               "plans": {k: plan_to_dict(pl) for k, pl in self._mem.items()}}
+        os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, p)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return p
+
+    def load(self, path: str) -> int:
+        """Merge plans from an artifact; returns how many were loaded.
+        Malformed or stale entries are skipped with a warning, never fatal —
+        a hand-edited artifact must not brick a serving warm-start."""
+        p = os.path.abspath(os.path.expanduser(path))
+        with open(p) as f:
+            doc = json.load(f)
+        loaded = 0
+        skipped = []
+        for k, d in doc.get("plans", {}).items():
+            try:
+                plan = plan_from_dict(d)
+            except (KeyError, TypeError, ValueError) as e:
+                skipped.append((k, e))
+                continue
+            self._mem[k] = plan
+            self._mem.move_to_end(k)
+            loaded += 1
+        if skipped:
+            print(f"repro.plan: skipped {len(skipped)} malformed plan "
+                  f"entr{'y' if len(skipped) == 1 else 'ies'} in {p} "
+                  f"(first: {skipped[0][0]!r}: {skipped[0][1]})",
+                  file=sys.stderr)
+        self._evict()
+        return loaded
+
+
+# -- process-wide default registry ------------------------------------------
+_default: Optional[PlanRegistry] = None
+
+
+def default_registry() -> PlanRegistry:
+    global _default
+    if _default is None:
+        _default = PlanRegistry()
+    return _default
+
+
+def set_default_registry(registry: Optional[PlanRegistry]) -> None:
+    """Install (or with None, reset) the process-wide registry — used by
+    serving warm-start code and tests."""
+    global _default
+    _default = registry
+
+
+def get_plan(scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
+             policy: PolicySpec = "analytic", interpret: bool = True,
+             use_pallas: bool = True,
+             registry: Optional[PlanRegistry] = None) -> ConvPlan:
+    """Plan-once convenience on the default (or given) registry."""
+    reg = registry if registry is not None else default_registry()
+    return reg.get_or_build(scene, op, policy=policy, interpret=interpret,
+                            use_pallas=use_pallas)

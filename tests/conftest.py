@@ -10,9 +10,11 @@ def _isolated_tune_artifacts(tmp_path, monkeypatch):
                        str(tmp_path / "isolated_tune_cache.json"))
     monkeypatch.setenv("REPRO_CALIBRATION",
                        str(tmp_path / "isolated_calibration.json"))
-    from repro import tune
+    from repro import plan, tune
     tune.set_default_cache(None)
     tune.set_active_cost_model(None)
+    plan.set_default_registry(None)
     yield
     tune.set_default_cache(None)
     tune.set_active_cost_model(None)
+    plan.set_default_registry(None)

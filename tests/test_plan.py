@@ -1,0 +1,306 @@
+"""Plan layer: numerical parity of fprop/dgrad/wgrad plans vs the reference,
+registry hit/miss/LRU/serialization behavior, and the plan-once contract —
+``execute()`` performs zero schedule resolutions, zero tune-cache IO, and
+zero padded-shape derivations after ``make_plan``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.plan.build as build_mod
+import repro.tune.cache as cache_mod
+from repro.core.conv import mg3m_conv_nhwc
+from repro.core.scene import ConvScene
+from repro.kernels import ops, ref
+from repro.plan import (ConvOp, PlanRegistry, default_registry, get_plan,
+                        grad_filter_scene, grad_input_scene, make_plan,
+                        plan_from_dict, plan_to_dict)
+
+SCENES = {
+    "plain":     (4, 8, 12, 9, 3, 1, 1),
+    "pointwise": (2, 6, 6, 7, 1, 0, 1),
+    "remainder": (3, 5, 7, 9, 3, 0, 1),   # awkward primes
+    "strided":   (2, 8, 4, 10, 3, 1, 2),  # backward -> reference fallback
+    "unpadded":  (2, 4, 6, 8, 3, 0, 1),
+}
+
+
+def _scene(b, ic, oc, hw, f, pad, std):
+    return ConvScene(B=b, IC=ic, OC=oc, inH=hw, inW=hw, fltH=f, fltW=f,
+                     padH=pad, padW=pad, stdH=std, stdW=std)
+
+
+def _operands(sc, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    inp = jax.random.normal(k1, sc.in_shape(), jnp.float32)
+    flt = jax.random.normal(k2, sc.flt_shape(), jnp.float32)
+    cot = jax.random.normal(k3, sc.out_shape(), jnp.float32)
+    return inp, flt, cot
+
+
+# -- numerical parity: all three ops through the same selector ---------------
+@pytest.mark.parametrize("name", sorted(SCENES))
+def test_plan_ops_match_reference(name):
+    sc = _scene(*SCENES[name])
+    inp, flt, cot = _operands(sc)
+
+    def loss_ref(i, f):
+        return jnp.sum(ref.conv_ref(i, f, sc) * cot)
+
+    want_din, want_dflt = jax.grad(loss_ref, argnums=(0, 1))(inp, flt)
+
+    got_out = make_plan(sc, ConvOp.FPROP).execute(inp, flt)
+    np.testing.assert_allclose(got_out, ref.conv_ref(inp, flt, sc),
+                               rtol=1e-4, atol=1e-4)
+    got_din = make_plan(sc, ConvOp.DGRAD).execute(cot, flt)
+    np.testing.assert_allclose(got_din, want_din, rtol=1e-4, atol=1e-4)
+    got_dflt = make_plan(sc, ConvOp.WGRAD).execute(inp, cot)
+    np.testing.assert_allclose(got_dflt, want_dflt, rtol=1e-4, atol=1e-4)
+
+
+def test_backward_scenes_go_through_the_selector():
+    """dgrad/wgrad are ConvScenes with their own (often different) grain."""
+    sc = _scene(*SCENES["plain"])
+    gsc = grad_input_scene(sc)
+    assert (gsc.IC, gsc.OC) == (sc.OC, sc.IC)
+    assert (gsc.inH, gsc.inW) == (sc.outH, sc.outW)
+    wsc = grad_filter_scene(sc)
+    assert (wsc.B, wsc.IC, wsc.OC) == (sc.IC, sc.B, sc.OC)
+    assert (wsc.outH, wsc.outW) == (sc.fltH, sc.fltW)
+    for op in (ConvOp.DGRAD, ConvOp.WGRAD):
+        plan = make_plan(sc, op)
+        assert not plan.uses_reference
+        assert plan.choice is not None and plan.spec is not None
+
+
+def test_forced_policy_is_pinned_and_recorded():
+    sc = _scene(*SCENES["plain"])
+    plan = make_plan(sc, policy="TB88")
+    assert plan.schedule == "TB88" and plan.policy == "forced:TB88"
+    inp, flt, _ = _operands(sc)
+    np.testing.assert_allclose(plan.execute(inp, flt),
+                               ref.conv_ref(inp, flt, sc),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_strided_backward_surfaces_reference_fallback_as_metadata():
+    sc = _scene(*SCENES["strided"])
+    dplan = make_plan(sc, ConvOp.DGRAD)
+    assert dplan.uses_reference
+    assert dplan.choice is None and dplan.spec is None
+    assert any("strided" in n for n in dplan.notes)
+    wplan = make_plan(sc, ConvOp.WGRAD)
+    assert wplan.uses_reference and any("strided" in n for n in wplan.notes)
+    # the forward of the same scene still runs through Pallas
+    assert not make_plan(sc, ConvOp.FPROP).uses_reference
+
+
+def test_execute_validates_operand_shapes():
+    sc = _scene(*SCENES["plain"])
+    inp, flt, cot = _operands(sc)
+    plan = make_plan(sc)
+    with pytest.raises(ValueError, match="expects operands"):
+        plan.execute(flt, inp)
+    a_shape, b_shape, out_shape = plan.io_shapes()
+    assert (a_shape, b_shape, out_shape) == (
+        sc.in_shape(), sc.flt_shape(), sc.out_shape())
+    assert make_plan(sc, ConvOp.DGRAD).io_shapes() == (
+        sc.out_shape(), sc.flt_shape(), sc.in_shape())
+
+
+# -- the plan-once contract --------------------------------------------------
+def test_execute_performs_zero_resolutions_and_cache_io(monkeypatch):
+    sc = _scene(*SCENES["plain"])
+    inp, flt, _ = _operands(sc)
+    calls = {"select": 0, "cache_get": 0, "cache_load": 0, "derive": 0}
+
+    def counting(name, fn):
+        def wrapper(*a, **kw):
+            calls[name] += 1
+            return fn(*a, **kw)
+        return wrapper
+
+    import repro.tune.autotune as autotune_mod
+    counted_select = counting("select", build_mod.select_schedule)
+    monkeypatch.setattr(build_mod, "select_schedule", counted_select)
+    monkeypatch.setattr(autotune_mod, "select_schedule", counted_select)
+    monkeypatch.setattr(build_mod, "derive_exec_spec",
+                        counting("derive", build_mod.derive_exec_spec))
+    monkeypatch.setattr(cache_mod.ScheduleCache, "get",
+                        counting("cache_get", cache_mod.ScheduleCache.get))
+    monkeypatch.setattr(cache_mod.ScheduleCache, "load",
+                        counting("cache_load", cache_mod.ScheduleCache.load))
+
+    # "tuned" exercises the cache path too (miss -> analytic selection).
+    plan = make_plan(sc, ConvOp.FPROP, policy="tuned")
+    after_build = dict(calls)
+    assert after_build["select"] == 1, "plan build resolves exactly once"
+    assert after_build["derive"] == 1
+    assert after_build["cache_get"] == 1, "tuned policy consults the cache"
+
+    for _ in range(5):
+        plan.execute(inp, flt)
+    assert calls == after_build, (
+        f"execute() must not resolve/derive/touch the cache: "
+        f"{after_build} -> {calls}")
+
+
+def test_legacy_per_call_path_still_resolves_per_call(monkeypatch):
+    """The shim keeps the legacy contract: resolution on every call."""
+    sc = _scene(*SCENES["plain"])
+    inp, flt, _ = _operands(sc)
+    calls = {"n": 0}
+    orig = build_mod.resolve_policy
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(build_mod, "resolve_policy", counting)
+    ops.mg3m_conv_op(inp, flt, sc)
+    ops.mg3m_conv_op(inp, flt, sc)
+    assert calls["n"] == 2
+
+
+# -- registry ----------------------------------------------------------------
+def test_registry_hit_miss_and_identity():
+    reg = PlanRegistry()
+    sc = _scene(*SCENES["plain"])
+    assert reg.get(sc) is None
+    assert reg.stats()["misses"] == 1
+    p1 = reg.get_or_build(sc)
+    p2 = reg.get_or_build(sc)
+    assert p1 is p2, "a registry hit returns the same frozen plan"
+    assert reg.stats() == {"size": 1, "hits": 1, "misses": 2, "evictions": 0}
+    # a different op / policy / dtype is a different plan
+    reg.get_or_build(sc, ConvOp.DGRAD)
+    reg.get_or_build(sc, policy="TB88")
+    assert len(reg) == 3
+
+
+def test_registry_amortizes_forced_policies():
+    """put() keys on the plan's canonical policy tag — a forced-policy plan
+    must be found again (policy_tag is idempotent on 'forced:*')."""
+    reg = PlanRegistry()
+    sc = _scene(*SCENES["plain"])
+    p1 = reg.get_or_build(sc, policy="TB88")
+    p2 = reg.get_or_build(sc, policy="TB88")
+    assert p1 is p2 and reg.stats()["hits"] == 1
+    choice = p1.choice
+    q1 = reg.get_or_build(sc, policy=choice)   # pinned ScheduleChoice
+    q2 = reg.get_or_build(sc, policy=choice)
+    assert q1 is q2 and len(reg) == 2
+    # the artifact persists the canonical key, so a warm start hits too
+    import json, tempfile, os
+    path = os.path.join(tempfile.mkdtemp(), "plans.json")
+    reg.save(path)
+    fresh = PlanRegistry()
+    fresh.load(path)
+    assert fresh.get(sc, policy="TB88") is not None
+    with open(path) as f:
+        keys = list(json.load(f)["plans"])
+    assert not any("forced:forced" in k for k in keys)
+
+
+def test_registry_lru_eviction():
+    reg = PlanRegistry(max_plans=2)
+    scenes = [_scene(2, 4, 4, 6 + i, 3, 1, 1) for i in range(3)]
+    for sc in scenes:
+        reg.get_or_build(sc)
+    assert len(reg) == 2 and reg.stats()["evictions"] == 1
+    assert reg.get(scenes[0]) is None, "LRU evicts the oldest plan"
+    assert reg.get(scenes[2]) is not None
+    # touching scenes[1] protects it from the next eviction
+    reg.get(scenes[1])
+    reg.get_or_build(scenes[0])
+    assert reg.get(scenes[1]) is not None
+    assert reg.get(scenes[2]) is None
+
+
+def test_default_registry_amortizes_get_plan():
+    sc = _scene(*SCENES["plain"])
+    p1 = get_plan(sc)
+    p2 = get_plan(sc)
+    assert p1 is p2
+    reg = default_registry()
+    assert reg.hits >= 1 and len(reg) >= 1
+
+
+# -- serialization -----------------------------------------------------------
+def test_plan_dict_roundtrip_pins_the_choice():
+    sc = _scene(*SCENES["plain"])
+    plan = make_plan(sc, ConvOp.FPROP, policy="TB88")
+    back = plan_from_dict(plan_to_dict(plan))
+    assert back == plan
+
+
+def test_registry_save_load_roundtrip(tmp_path):
+    reg = PlanRegistry()
+    plain = _scene(*SCENES["plain"])
+    strided = _scene(*SCENES["strided"])
+    for op in ConvOp:
+        reg.get_or_build(plain, op)
+        reg.get_or_build(strided, op)   # includes reference-fallback plans
+    path = str(tmp_path / "plans.json")
+    reg.save(path)
+
+    fresh = PlanRegistry()
+    assert fresh.load(path) == 6
+    assert fresh.plans() == reg.plans()
+
+    # warm-started plans execute without any re-resolution
+    inp, flt, cot = _operands(plain)
+    got = fresh.get(plain, ConvOp.FPROP).execute(inp, flt)
+    np.testing.assert_allclose(got, ref.conv_ref(inp, flt, plain),
+                               rtol=1e-4, atol=1e-4)
+    dplan = fresh.get(strided, ConvOp.DGRAD)
+    assert dplan.uses_reference, "reference fallback survives the roundtrip"
+
+
+def test_registry_load_skips_malformed_entries(tmp_path, capsys):
+    reg = PlanRegistry()
+    sc = _scene(*SCENES["plain"])
+    reg.get_or_build(sc)
+    path = str(tmp_path / "plans.json")
+    reg.save(path)
+    import json
+    with open(path) as f:
+        doc = json.load(f)
+    doc["plans"]["v=bogus"] = {"scene": {"B": -1}, "op": "fprop"}
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    fresh = PlanRegistry()
+    assert fresh.load(path) == 1, "malformed entry skipped, good one loaded"
+
+
+# -- public-path validation (asserts replaced by ValueErrors) ----------------
+def test_nhwc_channel_mismatch_raises_value_error():
+    x = jnp.zeros((2, 8, 8, 6))
+    w = jnp.zeros((3, 3, 5, 10))   # 5 != 6 input channels
+    with pytest.raises(ValueError, match="input channels"):
+        mg3m_conv_nhwc(x, w, padding=(1, 1))
+
+
+def test_conv_op_shape_mismatch_raises_value_error():
+    sc = _scene(*SCENES["plain"])
+    inp, flt, _ = _operands(sc)
+    with pytest.raises(ValueError, match="IN layout"):
+        ops.mg3m_conv_op(inp[:-1], flt, sc)
+    with pytest.raises(ValueError, match="FLT layout"):
+        ops.mg3m_conv_op(inp, flt[..., :-1], sc)
+
+
+def test_scene_rejects_unparseable_dtype():
+    with pytest.raises(ValueError, match="dtype"):
+        ConvScene(B=1, IC=1, OC=1, inH=4, inW=4, fltH=3, fltW=3,
+                  dtype="not-a-dtype")
+
+
+def test_plans_are_frozen_and_hashable():
+    sc = _scene(*SCENES["plain"])
+    plan = make_plan(sc)
+    hash(plan)   # jit-stability requires hashable static plans
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.interpret = False
