@@ -5,9 +5,12 @@ All three directions are first-class plan ops (``ConvOp.FPROP`` /
 *scenes* whose granularity the selector picks independently of the forward
 (dOUT has OC channels where IN had IC; wgrad contracts the batch dim).
 Scene derivation lives in ``repro.plan.build`` (``grad_input_scene`` /
-``grad_filter_scene``); strided forwards have no MG3M-expressible backward
-scene and their plans record ``uses_reference=True`` — visible metadata, not
-a buried comment.
+``grad_filter_scene``); strided forwards dispatch to Pallas in all three
+directions (the backward scenes are dilated).  ``uses_reference`` is
+recorded *per op*: the rare genuinely-inexpressible direction (padding
+exceeding the dilated filter extent minus one blocks dgrad only) falls
+back alone while the other two still run Pallas — see
+``TrainingPlans.reference_ops``.
 
 Two APIs:
 
@@ -45,9 +48,18 @@ class TrainingPlans:
 
     @property
     def uses_reference(self) -> bool:
-        """True when any direction bypasses Pallas (see each plan's notes)."""
-        return (self.fprop.uses_reference or self.dgrad.uses_reference
-                or self.wgrad.uses_reference)
+        """True when *any* direction bypasses Pallas — an aggregate.  The
+        per-op truth is ``reference_ops``: a blocked dgrad does not stop
+        fprop/wgrad from dispatching to Pallas, so don't branch a whole
+        layer to reference on this alone."""
+        return bool(self.reference_ops)
+
+    @property
+    def reference_ops(self) -> tuple:
+        """Names of the directions that execute the jnp reference (each
+        plan's ``uses_reference`` recorded per op), e.g. ``("dgrad",)``."""
+        return tuple(p.op.value for p in (self.fprop, self.dgrad, self.wgrad)
+                     if p.uses_reference)
 
     def describe(self) -> str:
         return " | ".join(p.describe() for p in (self.fprop, self.dgrad,
@@ -102,8 +114,8 @@ conv_with_plans.defvjp(_fwd, _bwd)
 # --------------------------------------------------------------------------
 def grad_input(d_out: jax.Array, flt: jax.Array, scene: ConvScene, *,
                interpret: bool = True, use_pallas: bool = True) -> jax.Array:
-    """dL/dIN via the scene's DGRAD plan (jnp adjoint on strided forwards —
-    see the plan's ``uses_reference``/``notes``)."""
+    """dL/dIN via the scene's DGRAD plan (Pallas even on strided forwards;
+    see the plan's ``uses_reference``/``notes`` for the rare fallback)."""
     plan = get_plan(scene, ConvOp.DGRAD, interpret=interpret,
                     use_pallas=use_pallas)
     return plan.execute(d_out, flt)

@@ -158,7 +158,14 @@ def _mxu_rate(dtype: str) -> float:
 
 
 def grid_steps(scene: ConvScene, bm: int, bn: int, bk: int) -> int:
-    """Total Pallas grid steps of a blocked schedule over one scene."""
+    """Total Pallas grid steps of a blocked schedule over one scene.
+
+    Deliberately counts *all* ``fltH x fltW`` taps, not the dilation-reduced
+    useful taps (``scene.taps_h/taps_w``): the kernels iterate every tap and
+    burn a full MXU pass on the sentinel zeros of an lhs-dilated scene, so
+    the compute/overhead terms must too.  Only ``scene.flops`` (useful work,
+    the efficiency numerator) and the AI band shrink under dilation — which
+    is exactly how ``select_schedule`` ranks dilated scenes honestly."""
     return (scene.num_spatial_tasks
             * ceil_div(scene.M, bm) * ceil_div(scene.N, bn)
             * scene.fltH * scene.fltW * ceil_div(scene.K, bk))
@@ -181,7 +188,12 @@ def _quantized_macs(scene: ConvScene, bm: int, bn: int, bk: int) -> float:
 
 
 def _traffic_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> int:
-    """HBM bytes moved under each schedule's residency pattern."""
+    """HBM bytes moved under each schedule's residency pattern.
+
+    The per-task input window counts all ``fltH x fltW`` tap fetches — on
+    lhs-dilated scenes the hole taps still DMA the (zero) sentinel block,
+    so dilation does not shrink the streamed traffic, only the useful
+    FLOPs.  ``bytes_out`` already reflects the dilation-grown output."""
     it = _dtype_bytes(scene.dtype)
     flt = scene.fltH * scene.fltW * scene.K * scene.M * it
     in_win = scene.fltH * scene.fltW * scene.K * scene.N * it  # window per task

@@ -22,7 +22,22 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ConvScene:
-    """Static description of one convolution problem (paper Table 1 symbols)."""
+    """Static description of one convolution problem (paper Table 1 symbols).
+
+    Beyond the paper's forward dims, a scene carries the two dilation axes
+    that make the *backward* convolutions of strided forwards expressible as
+    MG3M scenes (cuDNN treats the whole family as one gemm-mapped primitive):
+
+      ``dilH``/``dilW``   input (lhs) dilation — the input is read as if
+                          zero-interleaved with ``dil - 1`` zeros between
+                          elements (transposed convolution / dgrad of a
+                          strided forward);
+      ``fdilH``/``fdilW`` filter (rhs) dilation — taps are ``fdil`` apart
+                          (atrous convolution / wgrad of a strided forward);
+      ``apadH``/``apadW`` extra zero padding on the *high* spatial side only
+                          (the adjoint of a forward with stride remainder
+                          needs asymmetric padding).
+    """
 
     B: int
     IC: int
@@ -36,6 +51,12 @@ class ConvScene:
     stdH: int = 1
     stdW: int = 1
     dtype: str = "float32"
+    dilH: int = 1
+    dilW: int = 1
+    fdilH: int = 1
+    fdilW: int = 1
+    apadH: int = 0
+    apadW: int = 0
 
     def __post_init__(self):
         if min(self.B, self.IC, self.OC, self.inH, self.inW, self.fltH, self.fltW) <= 0:
@@ -44,6 +65,10 @@ class ConvScene:
             raise ValueError("stride must be positive")
         if self.padH < 0 or self.padW < 0:
             raise ValueError("padding must be non-negative")
+        if min(self.dilH, self.dilW, self.fdilH, self.fdilW) <= 0:
+            raise ValueError("dilation must be positive")
+        if self.apadH < 0 or self.apadW < 0:
+            raise ValueError("extra high-side padding must be non-negative")
         try:
             jnp.dtype(self.dtype)
         except TypeError as e:
@@ -55,12 +80,50 @@ class ConvScene:
 
     # -- derived spatial dims ------------------------------------------------
     @property
+    def dilated_inH(self) -> int:
+        """Input H extent after lhs dilation (zeros interleaved)."""
+        return (self.inH - 1) * self.dilH + 1
+
+    @property
+    def dilated_inW(self) -> int:
+        return (self.inW - 1) * self.dilW + 1
+
+    @property
+    def dilated_fltH(self) -> int:
+        """Filter H footprint after rhs dilation (taps ``fdilH`` apart)."""
+        return (self.fltH - 1) * self.fdilH + 1
+
+    @property
+    def dilated_fltW(self) -> int:
+        return (self.fltW - 1) * self.fdilW + 1
+
+    @property
     def outH(self) -> int:
-        return (self.inH + 2 * self.padH - self.fltH) // self.stdH + 1
+        return ((self.dilated_inH + 2 * self.padH + self.apadH
+                 - self.dilated_fltH) // self.stdH + 1)
 
     @property
     def outW(self) -> int:
-        return (self.inW + 2 * self.padW - self.fltW) // self.stdW + 1
+        return ((self.dilated_inW + 2 * self.padW + self.apadW
+                 - self.dilated_fltW) // self.stdW + 1)
+
+    @property
+    def is_dilated(self) -> bool:
+        """True when any dilation axis is active (the kernels then read the
+        compact input through hole-skipping index maps)."""
+        return (self.dilH, self.dilW, self.fdilH, self.fdilW) != (1, 1, 1, 1)
+
+    def dilation_suffix(self) -> str:
+        """Canonical ``|dil=..|fdil=..|apad=..`` key fragment shared by the
+        tune-cache and plan-registry signatures — empty when every dilation
+        axis is at its default, so pre-dilation keys stay byte-identical.
+        One definition: a future scene axis added here reaches both key
+        formats at once instead of silently colliding in one of them."""
+        if not (self.is_dilated or self.apadH or self.apadW):
+            return ""
+        return (f"|dil={self.dilH},{self.dilW}"
+                f"|fdil={self.fdilH},{self.fdilW}"
+                f"|apad={self.apadH},{self.apadW}")
 
     # -- MM_unit dims (paper §4.1.1) ------------------------------------------
     @property
@@ -81,14 +144,27 @@ class ConvScene:
         return self.outH * self.outW
 
     @property
+    def taps_h(self) -> int:
+        """Filter taps per output pixel along H that touch a *real* input
+        element.  Under lhs dilation only every ``dilH``-th tap lands on a
+        stored element (the rest read interleaved zeros), so the useful
+        reduction depth shrinks by ~``dilH`` (exact when ``dilH == 1``)."""
+        return ceil_div(self.fltH, self.dilH)
+
+    @property
+    def taps_w(self) -> int:
+        return ceil_div(self.fltW, self.dilW)
+
+    @property
     def reduction_len(self) -> int:
-        """Accumulation depth of one output pixel: IC * fltH * fltW."""
-        return self.IC * self.fltH * self.fltW
+        """Useful accumulation depth of one output pixel: IC * real taps."""
+        return self.IC * self.taps_h * self.taps_w
 
     # -- cost terms ------------------------------------------------------------
     @property
     def macs(self) -> int:
-        """Multiply-accumulates of the whole convolution."""
+        """Useful multiply-accumulates of the whole convolution (dilation
+        holes contribute nothing and are not counted)."""
         return self.B * self.OC * self.outH * self.outW * self.reduction_len
 
     @property
@@ -121,13 +197,21 @@ class ConvScene:
         return (self.outH, self.outW, self.OC, self.B)
 
     def padded_in_shape(self) -> Tuple[int, int, int, int]:
-        return (self.inH + 2 * self.padH, self.inW + 2 * self.padW, self.IC, self.B)
+        """Shape of the dense spatially pre-padded input (the non-lhs-dilated
+        kernel route; lhs-dilated scenes keep the compact input instead)."""
+        return (self.inH + 2 * self.padH + self.apadH,
+                self.inW + 2 * self.padW + self.apadW, self.IC, self.B)
 
     def describe(self) -> str:
+        extra = ""
+        if self.is_dilated or self.apadH or self.apadW:
+            extra = (f" dil={self.dilH},{self.dilW}"
+                     f" fdil={self.fdilH},{self.fdilW}"
+                     f" apad={self.apadH},{self.apadW}")
         return (
             f"scene(B={self.B} IC={self.IC} OC={self.OC} "
             f"in={self.inH}x{self.inW} flt={self.fltH}x{self.fltW} "
-            f"pad={self.padH},{self.padW} std={self.stdH},{self.stdW} "
+            f"pad={self.padH},{self.padW} std={self.stdH},{self.stdW}{extra} "
             f"MM_unit M={self.M} N={self.N} K={self.K} "
             f"tasks={self.num_spatial_tasks} AI={self.arithmetic_intensity:.1f})"
         )

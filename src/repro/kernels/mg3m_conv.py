@@ -12,9 +12,24 @@ core/mapping.py for the selection model):
   TB88: grid (outH, outW, n_m, n_n, fltH, fltW, n_k); classic 2D+K tiled
         GEMM per output pixel.
 
-All kernels consume a *spatially pre-padded* input (ops.py applies padH/padW
-and aligns channel dims), layouts per the paper:
-  IN [inHp, inWp, K, N]   FLT [fltH, fltW, K, M]   OUT [outH, outW, M, N]
+Input layout depends on the scene's lhs dilation (see ``_in_index_map``):
+
+  dilH == dilW == 1   a *spatially pre-padded* input [inHp, inWp, K, N]
+                      (``plan/build.py`` applies padH/padW/apad and aligns
+                      channel dims); tap coordinates index it directly.
+  dilH or dilW > 1    the *compact* input [inH+1, inW+1, K, N] with one
+                      trailing zero row and column (the sentinel).  The
+                      index map folds padding and dilation arithmetic: taps
+                      that land on a dilation hole or outside the real
+                      extent fetch the sentinel's zeros instead of a memory
+                      blowup from host-side zero-interleaving.  This is how
+                      the dgrad of a strided forward (a transposed conv)
+                      stays on the Pallas fast path.
+
+Filter (rhs) dilation never needs a sentinel: the grid iterates the real
+taps only and the index map simply spaces them ``fdil`` apart.  Other
+layouts per the paper:
+  FLT [fltH, fltW, K, M]   OUT [outH, outW, M, N]
 with M=OC, N=B, K=IC.  Accumulation is always fp32 (the TPU analogue of the
 paper's DPD kernels), cast to the IO dtype on the final store.
 """
@@ -31,6 +46,34 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pallas_compat import TPUCompilerParams
 
 from repro.core.scene import ConvScene, ceil_div
+
+
+def _in_index_map(scene: ConvScene):
+    """Spatial index map shared by all three schedules.
+
+    Returns ``at(oh, ow, i, j) -> (ih, iw)`` mapping output pixel (oh, ow)
+    and filter tap (i, j) to the input block to fetch.  Dense route: the
+    input was pre-padded, the dilated-tap coordinate indexes it directly.
+    Sentinel route (lhs-dilated scenes): the coordinate is translated back
+    through padding and dilation; holes and out-of-range taps resolve to
+    the all-zero sentinel row/col appended at (inH, inW)."""
+    dense = scene.dilH == 1 and scene.dilW == 1
+
+    def at(oh, ow, i, j):
+        ph = oh * scene.stdH + i * scene.fdilH
+        pw = ow * scene.stdW + j * scene.fdilW
+        if dense:
+            return ph, pw
+        qh = ph - scene.padH
+        qw = pw - scene.padW
+        ok = ((qh >= 0) & (qh % scene.dilH == 0)
+              & (qh < scene.inH * scene.dilH)
+              & (qw >= 0) & (qw % scene.dilW == 0)
+              & (qw < scene.inW * scene.dilW))
+        return (jnp.where(ok, qh // scene.dilH, scene.inH),
+                jnp.where(ok, qw // scene.dilW, scene.inW))
+
+    return at
 
 
 def _dot_kt(flt_blk: jax.Array, in_blk: jax.Array) -> jax.Array:
@@ -70,9 +113,11 @@ def _tb11_kernel(in_ref, flt_ref, out_ref, acc_ref, *, flt_hw: Tuple[int, int],
 
 def conv_tb11(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
               interpret: bool = False) -> jax.Array:
-    """inp pre-padded [inHp, inWp, K, N]; returns [outH, outW, M, N]."""
+    """inp pre-padded (or compact+sentinel when lhs-dilated, see module doc);
+    returns [outH, outW, M, N]."""
     fh, fw, k, m = flt.shape
     n = inp.shape[-1]
+    at = _in_index_map(scene)
     grid = (scene.outH, scene.outW, fh, fw)
     kernel = functools.partial(_tb11_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
     return pl.pallas_call(
@@ -80,8 +125,7 @@ def conv_tb11(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, k, n),
-                         lambda oh, ow, i, j: (oh * scene.stdH + i,
-                                               ow * scene.stdW + j, 0, 0)),
+                         lambda oh, ow, i, j: (*at(oh, ow, i, j), 0, 0)),
             pl.BlockSpec((fh, fw, k, m), lambda oh, ow, i, j: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, m, n), lambda oh, ow, i, j: (oh, ow, 0, 0)),
@@ -119,6 +163,7 @@ def conv_tb18(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
     fh, fw, k, m = flt.shape
     n = inp.shape[-1]
     assert m % bm == 0, (m, bm)
+    at = _in_index_map(scene)
     grid = (m // bm, scene.outH, scene.outW, fh, fw)
     kernel = functools.partial(_tb18_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
     return pl.pallas_call(
@@ -126,8 +171,7 @@ def conv_tb18(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, k, n),
-                         lambda mm, oh, ow, i, j: (oh * scene.stdH + i,
-                                                   ow * scene.stdW + j, 0, 0)),
+                         lambda mm, oh, ow, i, j: (*at(oh, ow, i, j), 0, 0)),
             pl.BlockSpec((fh, fw, k, bm), lambda mm, oh, ow, i, j: (0, 0, 0, mm)),
         ],
         out_specs=pl.BlockSpec((1, 1, bm, n),
@@ -169,6 +213,7 @@ def conv_tb88(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
     n = inp.shape[-1]
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, bm, n, bn, k, bk)
     nk = k // bk
+    at = _in_index_map(scene)
     grid = (scene.outH, scene.outW, m // bm, n // bn, fh, fw, nk)
     kernel = functools.partial(_tb88_kernel, red_dims=(fh, fw, nk),
                                out_dtype=inp.dtype)
@@ -178,7 +223,7 @@ def conv_tb88(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
         in_specs=[
             pl.BlockSpec((1, 1, bk, bn),
                          lambda oh, ow, mm, nn, i, j, kk: (
-                             oh * scene.stdH + i, ow * scene.stdW + j, kk, nn)),
+                             *at(oh, ow, i, j), kk, nn)),
             pl.BlockSpec((1, 1, bk, bm),
                          lambda oh, ow, mm, nn, i, j, kk: (i, j, kk, mm)),
         ],

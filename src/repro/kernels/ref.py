@@ -15,14 +15,22 @@ from repro.core.scene import ConvScene
 
 
 def conv_ref(inp: jax.Array, flt: jax.Array, scene: ConvScene) -> jax.Array:
-    """Oracle via lax.conv_general_dilated in the paper's layouts."""
+    """Oracle via lax.conv_general_dilated in the paper's layouts.
+
+    Covers the full dilated scene family: ``dilH/dilW`` map to
+    ``lhs_dilation`` (transposed-conv / dgrad scenes), ``fdilH/fdilW`` to
+    ``rhs_dilation`` (atrous / wgrad scenes), and ``apadH/apadW`` to the
+    asymmetric high-side padding a stride-remainder adjoint needs."""
     dn = jax.lax.conv_dimension_numbers(
         inp.shape, flt.shape, ("HWCN", "HWIO", "HWCN"))
     out = jax.lax.conv_general_dilated(
         inp.astype(jnp.float32),
         flt.astype(jnp.float32),
         window_strides=(scene.stdH, scene.stdW),
-        padding=((scene.padH, scene.padH), (scene.padW, scene.padW)),
+        padding=((scene.padH, scene.padH + scene.apadH),
+                 (scene.padW, scene.padW + scene.apadW)),
+        lhs_dilation=(scene.dilH, scene.dilW),
+        rhs_dilation=(scene.fdilH, scene.fdilW),
         dimension_numbers=dn,
     )
     return out.astype(inp.dtype)
@@ -31,7 +39,10 @@ def conv_ref(inp: jax.Array, flt: jax.Array, scene: ConvScene) -> jax.Array:
 def conv_direct_ref(inp: np.ndarray, flt: np.ndarray, scene: ConvScene) -> np.ndarray:
     """Literal 7-loop direct convolution (paper Fig. 1), numpy, tiny shapes only.
 
-    Exists to validate conv_ref itself (oracle-of-the-oracle)."""
+    Exists to validate conv_ref itself (oracle-of-the-oracle).  Dilation
+    semantics spelled out: tap (fh, fw) of output pixel (oh, ow) lands on
+    *dilated* input coordinate ``oh*std + fh*fdil - pad``, which is a stored
+    element iff it is a non-negative multiple of ``dil`` inside the input."""
     out = np.zeros(scene.out_shape(), dtype=np.float64)
     inp = np.asarray(inp, dtype=np.float64)
     flt = np.asarray(flt, dtype=np.float64)
@@ -43,8 +54,11 @@ def conv_direct_ref(inp: np.ndarray, flt: np.ndarray, scene: ConvScene) -> np.nd
                     for ic in range(scene.IC):
                         for fh in range(scene.fltH):
                             for fw in range(scene.fltW):
-                                ih = oh * scene.stdH + fh - scene.padH
-                                iw = ow * scene.stdW + fw - scene.padW
+                                qh = oh * scene.stdH + fh * scene.fdilH - scene.padH
+                                qw = ow * scene.stdW + fw * scene.fdilW - scene.padW
+                                if qh % scene.dilH or qw % scene.dilW:
+                                    continue   # dilation hole
+                                ih, iw = qh // scene.dilH, qw // scene.dilW
                                 if 0 <= ih < scene.inH and 0 <= iw < scene.inW:
                                     acc += inp[ih, iw, ic, b] * flt[fh, fw, ic, oc]
                     out[oh, ow, oc, b] = acc

@@ -14,19 +14,31 @@ model, on MG3M terms):
     with the precomputed spec: zero schedule resolutions, zero tune-cache
     IO, zero shape arithmetic per call.
 
-Backward ops as scenes (the selector owns all three directions):
+Backward ops as scenes (the selector owns all three directions — strided
+forwards included, via the scene's dilation axes):
 
   DGRAD  dIN = conv(dOUT, rot180(FLT) with IC/OC swapped) — a fresh scene
-         with B'=B, IC'=OC, OC'=IC over dOUT's spatial dims.  Strided
-         forwards have no clean MG3M scene (the adjoint is a dilated
-         scatter): the plan records ``uses_reference=True`` and executes
-         the exact jnp adjoint instead — visible metadata, not a comment.
-  WGRAD  dFLT[fh,fw,ic,oc] = sum_{oh,ow,b} IN[fh+oh, fw+ow, ic, b]
-         * dOUT[oh,ow,oc,b] (stride 1) *is* a convolution with the batch
-         dim contracted: input IN with (B, IC) swapped, filter dOUT with
+         with B'=B, IC'=OC, OC'=IC over dOUT's spatial dims.  A strided
+         forward's adjoint is the same conv with dOUT *lhs-dilated* by the
+         stride (``dilH/dilW`` on the dgrad scene; stride and lhs dilation
+         swap roles between a conv and its input-adjoint), plus ``apad``
+         extra high-side zeros when the forward had a stride remainder.
+         The kernels read the compact dOUT through hole-skipping index
+         maps — no zero-interleaved scatter is materialized.
+  WGRAD  dFLT[fh,fw,ic,oc] = sum_{oh,ow,b} IN[std*oh+fh, std*ow+fw, ic, b]
+         * dOUT[oh,ow,oc,b] *is* a convolution with the batch dim
+         contracted: input IN with (B, IC) swapped, filter dOUT with
          (B, OC) swapped, scene B'=IC, IC'=B, OC'=OC, filter spatial
-         outHxoutW.  Strided forwards dilate the taps — reference fallback,
-         recorded the same way.
+         outHxoutW.  A strided forward *rhs-dilates* the taps
+         (``fdilH/fdilW`` on the wgrad scene); a stride remainder grows
+         the conv's spatial output past fltHxfltW, sliced back by the
+         executor (``ExecSpec.out_h/out_w``).
+
+  The only genuinely inexpressible adjoint left is padding exceeding the
+  dilated filter extent minus one (the adjoint's padding would be
+  negative): that dgrad — and only that op — records
+  ``uses_reference=True`` and executes the exact jnp adjoint, while fprop
+  and wgrad of the same scene still dispatch to Pallas.
 """
 from __future__ import annotations
 
@@ -112,7 +124,8 @@ def resolve_policy(scene: ConvScene, policy: PolicySpec,
 @dataclasses.dataclass(frozen=True)
 class ExecSpec:
     """Everything ``execute`` needs, precomputed: clipped blocks, spatial
-    pre-padding, channel/batch alignment targets, slice-back extents."""
+    pre-padding (or the sentinel route for lhs-dilated scenes), channel/
+    batch alignment targets, slice-back extents."""
 
     schedule: str
     bm: int                # clipped blocks actually passed to the kernel
@@ -125,44 +138,82 @@ class ExecSpec:
     kp: int                # aligned IC target (reduction-dim padding)
     m: int                 # slice-back extents of the true output
     n: int
+    apad_h: int = 0        # extra high-side spatial pre-padding
+    apad_w: int = 0
+    sentinel: bool = False  # lhs-dilated: compact input + zero sentinel
+    out_h: int = 0         # spatial slice-back extents (0 = full output;
+    out_w: int = 0         # wgrad trims stride-remainder rows/cols)
 
 
-def derive_exec_spec(scene: ConvScene, choice: ScheduleChoice) -> ExecSpec:
+def derive_exec_spec(scene: ConvScene, choice: ScheduleChoice,
+                     out_hw: Optional[Tuple[int, int]] = None) -> ExecSpec:
     """Precompute every padded/aligned dim the kernel dispatch needs —
-    the per-call shape arithmetic of the legacy path, done once."""
+    the per-call shape arithmetic of the legacy path, done once.
+    ``out_hw`` overrides the spatial slice-back extents (the wgrad scene's
+    conv output can exceed the true dFLT spatial dims by the forward's
+    stride remainder)."""
     m, n, k = scene.M, scene.N, scene.K
+    oh, ow = out_hw if out_hw is not None else (scene.outH, scene.outW)
+    extra = dict(apad_h=scene.apadH, apad_w=scene.apadW,
+                 sentinel=scene.dilH > 1 or scene.dilW > 1,
+                 out_h=oh, out_w=ow)
     if choice.schedule == "TB11":
-        return ExecSpec("TB11", m, n, k, scene.padH, scene.padW, m, n, k, m, n)
+        return ExecSpec("TB11", m, n, k, scene.padH, scene.padW, m, n, k,
+                        m, n, **extra)
     if choice.schedule == "TB18":
         bm = min(choice.bm, m)
         return ExecSpec("TB18", bm, n, k, scene.padH, scene.padW,
-                        round_up(m, bm), n, k, m, n)
+                        round_up(m, bm), n, k, m, n, **extra)
     bm, bn, bk = min(choice.bm, m), min(choice.bn, n), min(choice.bk, k)
     return ExecSpec("TB88", bm, bn, bk, scene.padH, scene.padW,
-                    round_up(m, bm), round_up(n, bn), round_up(k, bk), m, n)
+                    round_up(m, bm), round_up(n, bn), round_up(k, bk),
+                    m, n, **extra)
 
 
 # --------------------------------------------------------------------------
 # backward-scene derivation
 # --------------------------------------------------------------------------
+def _stride_remainders(scene: ConvScene) -> Tuple[int, int]:
+    """Spatial slack the forward's floor-div discards: input rows/cols past
+    the last window position.  The adjoint must re-grow them (as zeros of
+    gradient) via extra high-side padding."""
+    rh = (scene.dilated_inH + 2 * scene.padH
+          - scene.dilated_fltH) % scene.stdH
+    rw = (scene.dilated_inW + 2 * scene.padW
+          - scene.dilated_fltW) % scene.stdW
+    return rh, rw
+
+
 def grad_input_scene(scene: ConvScene) -> ConvScene:
     """The dIN convolution's scene: conv of dOUT with the rotated,
-    IC/OC-swapped filter.  Raises ``ValueError`` when the forward has no
-    MG3M-expressible adjoint (strided, or padding exceeding flt-1)."""
+    IC/OC-swapped filter.  Stride and lhs dilation swap roles between a
+    conv and its input-adjoint: a strided forward yields a *lhs-dilated*
+    dgrad scene (dOUT read with stride-many holes between elements), a
+    lhs-dilated forward yields a *strided* one; filter dilation carries
+    over unchanged.  Raises ``ValueError`` for the genuinely inexpressible
+    case — padding exceeding the dilated filter extent minus one."""
     why = _dgrad_blocker(scene)
     if why:
         raise ValueError(f"dgrad of {scene.describe()} has no MG3M scene: {why}")
+    rh, rw = _stride_remainders(scene)
     return ConvScene(
         B=scene.B, IC=scene.OC, OC=scene.IC,
         inH=scene.outH, inW=scene.outW,
         fltH=scene.fltH, fltW=scene.fltW,
-        padH=scene.fltH - 1 - scene.padH, padW=scene.fltW - 1 - scene.padW,
-        stdH=1, stdW=1, dtype=scene.dtype)
+        padH=scene.dilated_fltH - 1 - scene.padH,
+        padW=scene.dilated_fltW - 1 - scene.padW,
+        stdH=scene.dilH, stdW=scene.dilW,
+        dilH=scene.stdH, dilW=scene.stdW,
+        fdilH=scene.fdilH, fdilW=scene.fdilW,
+        apadH=rh, apadW=rw, dtype=scene.dtype)
 
 
 def grad_filter_scene(scene: ConvScene) -> ConvScene:
     """The dFLT convolution's scene: batch-contracted conv with filter
-    spatial = outHxoutW (stride-1 forwards only; strided taps dilate)."""
+    spatial = outHxoutW.  A strided forward *rhs-dilates* the taps (the
+    dOUT-as-filter is read ``std`` apart); a rhs-dilated forward makes the
+    wgrad conv strided.  The conv's spatial output is fltHxfltW plus the
+    forward's stride remainder — the executor slices it back."""
     why = _wgrad_blocker(scene)
     if why:
         raise ValueError(f"wgrad of {scene.describe()} has no MG3M scene: {why}")
@@ -171,22 +222,27 @@ def grad_filter_scene(scene: ConvScene) -> ConvScene:
         inH=scene.inH, inW=scene.inW,
         fltH=scene.outH, fltW=scene.outW,
         padH=scene.padH, padW=scene.padW,
-        stdH=1, stdW=1, dtype=scene.dtype)
+        stdH=scene.fdilH, stdW=scene.fdilW,
+        dilH=scene.dilH, dilW=scene.dilW,
+        fdilH=scene.stdH, fdilW=scene.stdW,
+        dtype=scene.dtype)
 
 
 def _dgrad_blocker(scene: ConvScene) -> Optional[str]:
-    if scene.stdH != 1 or scene.stdW != 1:
-        return ("strided forward: the adjoint is a dilated scatter "
-                "(no clean MG3M scene)")
-    if scene.padH > scene.fltH - 1 or scene.padW > scene.fltW - 1:
-        return "padding exceeds filter-1: adjoint padding would be negative"
+    if scene.apadH or scene.apadW:
+        return ("asymmetric extra padding: the adjoint of an apad scene "
+                "is not itself an MG3M scene")
+    if (scene.padH > scene.dilated_fltH - 1
+            or scene.padW > scene.dilated_fltW - 1):
+        return ("padding exceeds dilated-filter-extent-1: adjoint padding "
+                "would be negative")
     return None
 
 
 def _wgrad_blocker(scene: ConvScene) -> Optional[str]:
-    if scene.stdH != 1 or scene.stdW != 1:
-        return ("strided forward: filter taps are stride-dilated "
-                "(no clean MG3M scene)")
+    if scene.apadH or scene.apadW:
+        return ("asymmetric extra padding: the weight-gradient of an apad "
+                "scene is not itself an MG3M scene")
     return None
 
 
@@ -204,20 +260,32 @@ def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
 
 def _conv_body(inp: jax.Array, flt: jax.Array, scene: ConvScene,
                spec: ExecSpec, interpret: bool) -> jax.Array:
-    """Kernel dispatch from a precomputed spec (no shape arithmetic here)."""
-    inp_p = jnp.pad(inp, ((spec.pad_h, spec.pad_h), (spec.pad_w, spec.pad_w),
-                          (0, 0), (0, 0)))
+    """Kernel dispatch from a precomputed spec (no shape arithmetic here).
+
+    Lhs-dilated scenes take the sentinel route: the compact input gains one
+    trailing zero row/col and the kernel's index maps resolve padding,
+    holes, and out-of-range taps onto it — no zero-interleaved buffer."""
+    if spec.sentinel:
+        inp_p = jnp.pad(inp, ((0, 1), (0, 1), (0, 0), (0, 0)))
+    else:
+        inp_p = jnp.pad(inp, ((spec.pad_h, spec.pad_h + spec.apad_h),
+                              (spec.pad_w, spec.pad_w + spec.apad_w),
+                              (0, 0), (0, 0)))
     if spec.schedule == "TB11":
-        return kernels.conv_tb11(inp_p, flt, scene, interpret=interpret)
-    if spec.schedule == "TB18":
+        out = kernels.conv_tb11(inp_p, flt, scene, interpret=interpret)
+    elif spec.schedule == "TB18":
         flt_a = _pad_axis(flt, 3, spec.mp)
-        return kernels.conv_tb18(inp_p, flt_a, scene, bm=spec.bm,
-                                 interpret=interpret)[:, :, :spec.m, :]
-    inp_a = _pad_axis(_pad_axis(inp_p, 2, spec.kp), 3, spec.np_)
-    flt_a = _pad_axis(_pad_axis(flt, 2, spec.kp), 3, spec.mp)
-    return kernels.conv_tb88(inp_a, flt_a, scene, bm=spec.bm, bn=spec.bn,
-                             bk=spec.bk,
-                             interpret=interpret)[:, :, :spec.m, :spec.n]
+        out = kernels.conv_tb18(inp_p, flt_a, scene, bm=spec.bm,
+                                interpret=interpret)[:, :, :spec.m, :]
+    else:
+        inp_a = _pad_axis(_pad_axis(inp_p, 2, spec.kp), 3, spec.np_)
+        flt_a = _pad_axis(_pad_axis(flt, 2, spec.kp), 3, spec.mp)
+        out = kernels.conv_tb88(inp_a, flt_a, scene, bm=spec.bm, bn=spec.bn,
+                                bk=spec.bk,
+                                interpret=interpret)[:, :, :spec.m, :spec.n]
+    if (spec.out_h, spec.out_w) not in ((0, 0), (scene.outH, scene.outW)):
+        out = out[:spec.out_h, :spec.out_w]
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
@@ -227,7 +295,9 @@ def _exec_fprop(inp, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
 
 @functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
 def _exec_dgrad(d_out, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
-    # scene/spec here describe the *dgrad* scene (grad_input_scene).
+    # scene/spec here describe the *dgrad* scene (grad_input_scene); for a
+    # strided forward it is lhs-dilated and the kernels read the compact
+    # dOUT through the sentinel index maps.
     flt_rot = jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)   # rot180 + IC<->OC
     return _conv_body(d_out, flt_rot, scene, spec, interpret)
 
@@ -235,8 +305,10 @@ def _exec_dgrad(d_out, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
 @functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
 def _exec_wgrad(inp, d_out, scene: ConvScene, spec: ExecSpec, interpret: bool):
     # scene/spec describe the *wgrad* scene (grad_filter_scene): input with
-    # (IC, B) swapped, filter = dOUT with (OC, B) swapped, output
-    # [fltH, fltW, OC, IC] transposed back to the FLT layout.
+    # (IC, B) swapped, filter = dOUT with (OC, B) swapped (rhs-dilated by
+    # the forward stride), output [fltH(+r), fltW(+r), OC, IC] sliced back
+    # to the true filter dims (spec.out_h/out_w, inside _conv_body) and
+    # transposed to the FLT layout.
     out = _conv_body(inp.swapaxes(2, 3), d_out.swapaxes(2, 3), scene, spec,
                      interpret)
     return out.transpose(0, 1, 3, 2)
@@ -259,25 +331,13 @@ def _ref_dgrad(d_out, flt, scene: ConvScene):
 
 @functools.partial(jax.jit, static_argnames=("scene",))
 def _ref_wgrad(inp, d_out, scene: ConvScene):
-    """dL/dFLT: batch+spatial-contracted MM_units (fp32 accumulation)."""
-    f32 = jnp.float32
-    inp_p = jnp.pad(inp.astype(f32),
-                    ((scene.padH, scene.padH), (scene.padW, scene.padW),
-                     (0, 0), (0, 0)))
-    pieces = []
-    for fh in range(scene.fltH):
-        row = []
-        for fw in range(scene.fltW):
-            win = jax.lax.slice(
-                inp_p,
-                (fh, fw, 0, 0),
-                (fh + (scene.outH - 1) * scene.stdH + 1,
-                 fw + (scene.outW - 1) * scene.stdW + 1,
-                 scene.IC, scene.B),
-                (scene.stdH, scene.stdW, 1, 1))          # (outH,outW,IC,B)
-            row.append(jnp.einsum("hwib,hwob->io", win, d_out.astype(f32)))
-        pieces.append(jnp.stack(row))
-    return jnp.stack(pieces).astype(inp.dtype)           # (fh,fw,IC,OC)
+    """Exact dL/dFLT via jax.vjp of the reference conv — linear in FLT, so
+    the primal point is irrelevant (zeros); fp32 accumulation inside
+    ``conv_ref``.  Covers every scene the oracle covers (stride, both
+    dilation axes, asymmetric padding)."""
+    zero = jnp.zeros(scene.flt_shape(), d_out.dtype)
+    _, vjp = jax.vjp(lambda f: ref.conv_ref(inp, f, scene), zero)
+    return vjp(d_out)[0]
 
 
 # --------------------------------------------------------------------------
@@ -360,34 +420,54 @@ def make_plan(scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
     (schedule-cache resolution, analytic on miss), a forced "TB11"/"TB18"/
     "TB88", or an exact ``ScheduleChoice``.  The legacy spellings ``None``
     and ``"auto"`` alias "analytic" and "tuned".
+
+    Strided forwards resolve for all three ops (the backward scenes are
+    dilated, not reference fallbacks).  A forced policy on an op that
+    genuinely cannot dispatch to Pallas (dgrad when padding exceeds the
+    dilated filter extent minus one; dgrad *and* wgrad of a scene with
+    explicit ``apad``) raises ``ValueError`` naming that op instead of
+    silently returning a reference plan under a forced tag.
     """
     op = ConvOp(op)
+    tag = policy_tag(policy)
     notes = []
     uses_reference = not use_pallas
     if not use_pallas:
         notes.append(f"{op.value}: use_pallas=False; jnp reference")
 
+    out_hw = None
     exec_scene: Optional[ConvScene] = scene if op is ConvOp.FPROP else None
     if op is ConvOp.DGRAD:
         why = _dgrad_blocker(scene)
         if why is None:
             exec_scene = grad_input_scene(scene)
         elif use_pallas:
+            if tag.startswith("forced:"):
+                raise ValueError(
+                    f"dgrad of {scene.describe()} requires a reference "
+                    f"fallback ({why}); the forced policy {tag!r} cannot "
+                    f"be honored for this op")
             uses_reference = True
             notes.append(f"dgrad: {why}; exact jnp adjoint instead of Pallas")
     elif op is ConvOp.WGRAD:
         why = _wgrad_blocker(scene)
         if why is None:
             exec_scene = grad_filter_scene(scene)
+            out_hw = (scene.fltH, scene.fltW)   # trim stride-remainder rows
         elif use_pallas:
+            if tag.startswith("forced:"):
+                raise ValueError(
+                    f"wgrad of {scene.describe()} requires a reference "
+                    f"fallback ({why}); the forced policy {tag!r} cannot "
+                    f"be honored for this op")
             uses_reference = True
-            notes.append(f"wgrad: {why}; fp32 jnp einsum instead of Pallas")
+            notes.append(f"wgrad: {why}; exact jnp adjoint instead of Pallas")
 
     choice = spec = None
     if not uses_reference:
         choice = resolve_policy(exec_scene, policy, interpret)
-        spec = derive_exec_spec(exec_scene, choice)
-    return ConvPlan(scene=scene, op=op, policy=policy_tag(policy),
+        spec = derive_exec_spec(exec_scene, choice, out_hw)
+    return ConvPlan(scene=scene, op=op, policy=tag,
                     interpret=interpret, use_pallas=use_pallas,
                     uses_reference=uses_reference, notes=tuple(notes),
                     exec_scene=None if uses_reference else exec_scene,

@@ -4,7 +4,8 @@
 (scene dims + dtype + op + policy + interpret + use_pallas), with the same
 conventions as the tune subsystem's schedule cache: hit/miss counters,
 bounded LRU eviction, and a versioned JSON artifact (atomic tmp+rename
-``save``, merge-on-``load``) so serving processes and benchmarks can
+merge-on-``save`` so concurrent writers union rather than clobber,
+merge-on-``load``) so serving processes and benchmarks can
 warm-start a plan repository the way ``repro.tune`` warm-starts schedule
 selection.  Loading never re-runs schedule resolution: stored choices are
 pinned exactly (``build.assemble_plan``).
@@ -30,20 +31,24 @@ PLAN_VERSION = "mg3m-plan-v1"
 _SCHEMA = 1
 
 _SCENE_FIELDS = ("B", "IC", "OC", "inH", "inW", "fltH", "fltW",
-                 "padH", "padW", "stdH", "stdW", "dtype")
+                 "padH", "padW", "stdH", "stdW", "dtype",
+                 "dilH", "dilW", "fdilH", "fdilW", "apadH", "apadW")
 
 
 def plan_signature(scene: ConvScene, op: Union[ConvOp, str],
                    policy: PolicySpec, interpret: bool,
                    use_pallas: bool) -> str:
     """Canonical registry key.  Dtype-alias-stable (via numpy dtype names)
-    and explicit about everything that changes the executable."""
+    and explicit about everything that changes the executable.  Dilation
+    axes are appended only when active, so undilated keys — the entire
+    pre-dilation artifact population — stay byte-identical."""
     dt = jnp.dtype(scene.dtype).name
     return (f"v={PLAN_VERSION}|op={ConvOp(op).value}|pol={policy_tag(policy)}"
             f"|int={int(interpret)}|pl={int(use_pallas)}|dt={dt}"
             f"|B={scene.B}|IC={scene.IC}|OC={scene.OC}"
             f"|in={scene.inH}x{scene.inW}|flt={scene.fltH}x{scene.fltW}"
-            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}")
+            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}"
+            f"{scene.dilation_suffix()}")
 
 
 def plan_to_dict(plan: ConvPlan) -> Dict:
@@ -66,6 +71,24 @@ def plan_from_dict(d: Dict) -> ConvPlan:
     return assemble_plan(scene, d["op"], d["policy"], choice,
                          interpret=bool(d.get("interpret", True)),
                          use_pallas=bool(d.get("use_pallas", True)))
+
+
+def valid_plan_dict(d) -> bool:
+    """Validity check for one stored plan entry (the ``tune/cache.py``
+    ``valid_record`` analogue): an entry is valid iff ``plan_from_dict``
+    can actually rebuild it — anything ``load()`` would skip with a
+    warning must also be dropped by merge-on-``save``, or the dead entry
+    rides the artifact forever and warn-spams every warm-start.  Cheap for
+    well-formed entries: a pinned choice assembles without any schedule
+    resolution, and a choice-less (reference) entry short-circuits before
+    the selector."""
+    if not isinstance(d, dict):
+        return False
+    try:
+        plan_from_dict(d)
+        return True
+    except (KeyError, TypeError, ValueError):
+        return False
 
 
 class PlanRegistry:
@@ -143,10 +166,32 @@ class PlanRegistry:
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> str:
-        """Write the registry as a versioned JSON artifact (atomic)."""
+        """Merge-on-save: union our plans with whatever is on disk, then
+        write atomically (tmp+rename) — the ``tune/cache.py`` convention.
+
+        Two serving processes saving to the same artifact union rather than
+        blind-overwrite: the read-modify-write happens inside this call,
+        our in-memory plan wins a key collision (it is at least as fresh),
+        and disk-only keys — another writer's plans, or entries beyond our
+        LRU bound — ride along.  Like the tune cache this is lock-free:
+        saves whose read windows overlap can still lose keys the other
+        writer added in between (last rename wins); the merge closes the
+        common sequential-clobber case, it is not a locking guarantee."""
         p = os.path.abspath(os.path.expanduser(path))
-        doc = {"schema": _SCHEMA, "version": PLAN_VERSION,
-               "plans": {k: plan_to_dict(pl) for k, pl in self._mem.items()}}
+        plans = {k: plan_to_dict(pl) for k, pl in self._mem.items()}
+        if os.path.exists(p):
+            try:
+                with open(p) as f:
+                    doc = json.load(f)
+                on_disk = doc.get("plans", {}) if isinstance(doc, dict) else {}
+                if not isinstance(on_disk, dict):
+                    on_disk = {}
+            except (json.JSONDecodeError, OSError):
+                on_disk = {}   # corrupt artifact: overwrite with our state
+            for k, d in on_disk.items():
+                if k not in plans and valid_plan_dict(d):
+                    plans[k] = d   # drop malformed disk entries on save
+        doc = {"schema": _SCHEMA, "version": PLAN_VERSION, "plans": plans}
         os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".",
                                    suffix=".tmp")

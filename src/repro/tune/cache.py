@@ -57,12 +57,16 @@ def scene_signature(scene: ConvScene, *, backend: str,
     spellings (``"float32"`` / ``"<f4"`` / ``"f4"`` all canonicalize through
     ``jnp.dtype().name``) — and explicit about everything that changes the
     measured answer: every geometric dim, dtype, backend, code version.
+    The dilation axes (lhs/rhs dilation + asymmetric padding — the backward
+    scenes of strided forwards) are appended only when active, so every
+    pre-dilation cache entry keeps its exact key.
     """
     dt = jnp.dtype(scene.dtype).name
     return (f"v={version}|be={backend}|dt={dt}"
             f"|B={scene.B}|IC={scene.IC}|OC={scene.OC}"
             f"|in={scene.inH}x{scene.inW}|flt={scene.fltH}x{scene.fltW}"
-            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}")
+            f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}"
+            f"{scene.dilation_suffix()}")
 
 
 def parse_signature(key: str) -> Dict[str, str]:
@@ -77,16 +81,27 @@ def parse_signature(key: str) -> Dict[str, str]:
 def scene_from_signature(key: str) -> ConvScene:
     """Inverse of ``scene_signature`` (sans backend/version): rebuild the
     scene a cache entry was tuned for, so calibration can re-derive the cost
-    terms of stored records without a side-channel scene table."""
+    terms of stored records without a side-channel scene table.  The
+    dilation fields are optional in the key (absent = undilated)."""
     p = parse_signature(key)
     inH, inW = p["in"].split("x")
     fltH, fltW = p["flt"].split("x")
     padH, padW = p["pad"].split(",")
     stdH, stdW = p["std"].split(",")
+    extra = {}
+    if "dil" in p:
+        dilH, dilW = p["dil"].split(",")
+        extra.update(dilH=int(dilH), dilW=int(dilW))
+    if "fdil" in p:
+        fdilH, fdilW = p["fdil"].split(",")
+        extra.update(fdilH=int(fdilH), fdilW=int(fdilW))
+    if "apad" in p:
+        apadH, apadW = p["apad"].split(",")
+        extra.update(apadH=int(apadH), apadW=int(apadW))
     return ConvScene(B=int(p["B"]), IC=int(p["IC"]), OC=int(p["OC"]),
                      inH=int(inH), inW=int(inW), fltH=int(fltH),
                      fltW=int(fltW), padH=int(padH), padW=int(padW),
-                     stdH=int(stdH), stdW=int(stdW), dtype=p["dt"])
+                     stdH=int(stdH), stdW=int(stdW), dtype=p["dt"], **extra)
 
 
 def choice_to_dict(choice: ScheduleChoice) -> Dict:
@@ -236,11 +251,13 @@ class ScheduleCache:
         if os.path.exists(p):
             try:
                 with open(p) as f:
-                    for k, rec in json.load(f).get("entries", {}).items():
-                        if not valid_record(rec):
-                            continue   # drop malformed disk entries on save
-                        if k not in entries or _beats(rec, entries[k]):
-                            entries[k] = rec
+                    doc = json.load(f)
+                disk = doc.get("entries", {}) if isinstance(doc, dict) else {}
+                for k, rec in (disk if isinstance(disk, dict) else {}).items():
+                    if not valid_record(rec):
+                        continue   # drop malformed disk entries on save
+                    if k not in entries or _beats(rec, entries[k]):
+                        entries[k] = rec
             except (json.JSONDecodeError, OSError):
                 pass  # corrupt artifact: overwrite with our state
         os.makedirs(os.path.dirname(p), exist_ok=True)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mapping import ScheduleChoice
-from repro.core.scene import ConvScene
+from repro.core.scene import ConvScene, ceil_div
 
 # A candidate that cannot produce one timed call inside this budget is scored
 # at whatever it cost so far — bad-but-finite beats hanging the whole tune.
@@ -43,11 +43,14 @@ def proxy_scene(scene: ConvScene, *, measure_batch: Optional[int] = None,
         d["IC"] = min(scene.IC, measure_max_ch)
         d["OC"] = min(scene.OC, measure_max_ch)
     if measure_max_hw:
-        # Smallest input that still yields one output pixel is
-        # fltH - 2*padH (stride only affects how many *more* pixels fit),
-        # and a proxy must never be larger than the scene it stands in for.
-        min_h = max(scene.fltH - 2 * scene.padH, 1)
-        min_w = max(scene.fltW - 2 * scene.padW, 1)
+        # Smallest input that still yields one output pixel: the *dilated*
+        # input plus padding must cover the *dilated* filter footprint
+        # (stride only affects how many *more* pixels fit), and a proxy must
+        # never be larger than the scene it stands in for.
+        need_h = scene.dilated_fltH - 2 * scene.padH - scene.apadH
+        need_w = scene.dilated_fltW - 2 * scene.padW - scene.apadW
+        min_h = 1 + max(ceil_div(need_h - 1, scene.dilH), 0)
+        min_w = 1 + max(ceil_div(need_w - 1, scene.dilW), 0)
         d["inH"] = min(scene.inH, max(measure_max_hw, min_h))
         d["inW"] = min(scene.inW, max(measure_max_hw, min_w))
     return ConvScene(**d)

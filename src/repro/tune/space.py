@@ -12,6 +12,11 @@ Space shape per schedule (hardware-aligned, VMEM-budget-filtered):
   TB18  a pow2 ladder of OC-slice widths plus the exact sublane-rounded OC.
   TB88  a 3D grid of (bm, bn, bk) tiles; bn is lane-aligned (128 multiples),
         bm/bk sublane-aligned, all clipped to the rounded-up problem dims.
+
+Dilated scenes (the backward scenes of strided forwards — lhs/rhs dilation
+and asymmetric padding) enumerate the same space: candidate blocks depend
+only on the MM_unit dims (M, N, K), which dilation never changes; the cost
+model's scoring (`mapping._score`) is what accounts for the dilation holes.
 """
 from __future__ import annotations
 

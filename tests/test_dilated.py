@@ -1,0 +1,151 @@
+"""Dilated MG3M scenes: strided forwards' dgrad/wgrad run through the
+Pallas kernels (lhs/rhs dilation + sentinel index maps) and match
+``jax.grad`` of the reference; dispatch stays zero-resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.plan.build as build_mod
+from repro.core.autodiff import conv_with_plans, make_training_plans
+from repro.core.scene import ConvScene
+from repro.kernels import ref
+from repro.plan import ConvOp, grad_input_scene, grad_filter_scene, make_plan
+
+# (B, IC, OC, inH, inW, flt, pad, stdH, stdW)
+STRIDED_SCENES = {
+    "stride2":          (2, 8, 4, 10, 10, 3, 1, 2, 2),
+    "stride2_exact":    (2, 4, 6, 9, 9, 3, 1, 2, 2),
+    "stride3":          (2, 4, 5, 11, 11, 3, 1, 3, 3),
+    "asym_stride":      (3, 5, 7, 11, 9, 3, 0, 3, 2),   # + remainder dims
+    "even_filter":      (2, 4, 4, 8, 8, 2, 0, 2, 2),
+    "pointwise_stride": (2, 4, 4, 7, 7, 1, 0, 2, 2),
+}
+
+
+def _scene(b, ic, oc, h, w, f, pad, sh, sw, **kw):
+    return ConvScene(B=b, IC=ic, OC=oc, inH=h, inW=w, fltH=f, fltW=f,
+                     padH=pad, padW=pad, stdH=sh, stdW=sw, **kw)
+
+
+def _operands(sc, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(k1, sc.in_shape(), jnp.float32),
+            jax.random.normal(k2, sc.flt_shape(), jnp.float32),
+            jax.random.normal(k3, sc.out_shape(), jnp.float32))
+
+
+def _want_grads(sc, inp, flt, cot):
+    def loss(i, f):
+        return jnp.sum(ref.conv_ref(i, f, sc) * cot)
+    return jax.grad(loss, argnums=(0, 1))(inp, flt)
+
+
+# -- parity: strided backwards through the dilated Pallas kernels ------------
+@pytest.mark.parametrize("name", sorted(STRIDED_SCENES))
+def test_strided_backward_matches_jax_grad(name):
+    sc = _scene(*STRIDED_SCENES[name])
+    inp, flt, cot = _operands(sc)
+    want_din, want_dflt = _want_grads(sc, inp, flt, cot)
+
+    dplan = make_plan(sc, ConvOp.DGRAD)
+    wplan = make_plan(sc, ConvOp.WGRAD)
+    assert not dplan.uses_reference and not wplan.uses_reference
+    np.testing.assert_allclose(dplan.execute(cot, flt), want_din,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(wplan.execute(inp, cot), want_dflt,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", ["TB11", "TB18", "TB88"])
+def test_forced_grains_on_dilated_backward_scenes(schedule):
+    """Every grain's index maps handle the sentinel/dilated routes."""
+    sc = _scene(*STRIDED_SCENES["stride2"])
+    inp, flt, cot = _operands(sc, seed=1)
+    want_din, want_dflt = _want_grads(sc, inp, flt, cot)
+    got_din = make_plan(sc, ConvOp.DGRAD, policy=schedule).execute(cot, flt)
+    got_dflt = make_plan(sc, ConvOp.WGRAD, policy=schedule).execute(inp, cot)
+    np.testing.assert_allclose(got_din, want_din, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_dflt, want_dflt, rtol=1e-4, atol=1e-4)
+
+
+def test_directly_built_dilated_scene_matches_oracle():
+    """dil/fdil/apad are first-class forward axes, not just dgrad plumbing."""
+    sc = ConvScene(B=2, IC=3, OC=5, inH=5, inW=4, fltH=3, fltW=3,
+                   padH=2, padW=1, dilH=2, dilW=3, fdilH=2, fdilW=1, apadH=1)
+    inp, flt, _ = _operands(sc, seed=2)
+    want = ref.conv_ref(inp, flt, sc)
+    got = make_plan(sc, ConvOp.FPROP).execute(inp, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # and the 7-loop oracle agrees about the dilation semantics
+    direct = ref.conv_direct_ref(np.asarray(inp), np.asarray(flt), sc)
+    np.testing.assert_allclose(direct, np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_backward_scene_geometry():
+    """Stride <-> lhs dilation swap roles; wgrad taps are rhs-dilated."""
+    sc = _scene(*STRIDED_SCENES["asym_stride"])
+    gsc = grad_input_scene(sc)
+    assert (gsc.dilH, gsc.dilW) == (sc.stdH, sc.stdW)
+    assert (gsc.stdH, gsc.stdW) == (1, 1)
+    assert (gsc.outH, gsc.outW) == (sc.inH, sc.inW)
+    wsc = grad_filter_scene(sc)
+    assert (wsc.fdilH, wsc.fdilW) == (sc.stdH, sc.stdW)
+    assert (wsc.fltH, wsc.fltW) == (sc.outH, sc.outW)
+    assert wsc.outH >= sc.fltH and wsc.outW >= sc.fltW  # remainder, sliced
+
+
+def test_acceptance_scene_all_ops_pallas():
+    """ISSUE 4 acceptance: stride-2 56x56 conv plans Pallas end to end."""
+    sc = ConvScene(B=32, IC=64, OC=128, inH=56, inW=56, fltH=3, fltW=3,
+                   padH=1, padW=1, stdH=2, stdW=2)
+    for op in ConvOp:
+        assert not make_plan(sc, op).uses_reference, op
+
+
+def test_strided_training_step_matches_oracle_grads():
+    """conv_with_plans on a strided layer: pure-Pallas custom_vjp."""
+    sc = _scene(*STRIDED_SCENES["stride2"])
+    inp, flt, cot = _operands(sc, seed=3)
+    want_din, want_dflt = _want_grads(sc, inp, flt, cot)
+    plans = make_training_plans(sc)
+    assert plans.reference_ops == ()
+    assert not plans.uses_reference
+
+    def loss(i, f):
+        return jnp.sum(conv_with_plans(i, f, plans) * cot)
+
+    got_din, got_dflt = jax.grad(loss, argnums=(0, 1))(inp, flt)
+    np.testing.assert_allclose(got_din, want_din, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_dflt, want_dflt, rtol=2e-4, atol=2e-4)
+
+
+def test_strided_execute_performs_zero_resolutions(monkeypatch):
+    """The dispatch-count contract holds for dilated plans too."""
+    sc = _scene(*STRIDED_SCENES["stride2"])
+    inp, flt, cot = _operands(sc)
+    calls = {"n": 0}
+    orig = build_mod.select_schedule
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(build_mod, "select_schedule", counting)
+    dplan = make_plan(sc, ConvOp.DGRAD)
+    wplan = make_plan(sc, ConvOp.WGRAD)
+    after_build = calls["n"]
+    assert after_build == 2, "one resolution per plan build"
+    for _ in range(3):
+        dplan.execute(cot, flt)
+        wplan.execute(inp, cot)
+    assert calls["n"] == after_build, "execute() must not re-resolve"
+
+
+def test_per_op_reference_is_recorded_in_training_plans():
+    sc = _scene(2, 4, 4, 6, 6, 1, 1, 1, 1)   # pad > dilated flt extent - 1
+    plans = make_training_plans(sc)
+    assert plans.reference_ops == ("dgrad",)
+    assert plans.uses_reference          # aggregate still true
+    assert not plans.fprop.uses_reference
+    assert not plans.wgrad.uses_reference

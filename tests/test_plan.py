@@ -22,9 +22,13 @@ SCENES = {
     "plain":     (4, 8, 12, 9, 3, 1, 1),
     "pointwise": (2, 6, 6, 7, 1, 0, 1),
     "remainder": (3, 5, 7, 9, 3, 0, 1),   # awkward primes
-    "strided":   (2, 8, 4, 10, 3, 1, 2),  # backward -> reference fallback
+    "strided":   (2, 8, 4, 10, 3, 1, 2),  # backward -> dilated Pallas scenes
     "unpadded":  (2, 4, 6, 8, 3, 0, 1),
 }
+
+# padding > dilated-filter-extent-1: the one genuinely inexpressible adjoint
+# (dgrad only; fprop and wgrad still dispatch to Pallas).
+BLOCKED = (2, 4, 4, 6, 1, 1, 1)
 
 
 def _scene(b, ic, oc, hw, f, pad, std):
@@ -85,16 +89,40 @@ def test_forced_policy_is_pinned_and_recorded():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_strided_backward_surfaces_reference_fallback_as_metadata():
+def test_strided_backward_dispatches_to_pallas():
+    """Strided backwards are dilated MG3M scenes, not reference fallbacks."""
     sc = _scene(*SCENES["strided"])
+    dplan = make_plan(sc, ConvOp.DGRAD)
+    assert not dplan.uses_reference
+    assert dplan.choice is not None and dplan.spec is not None
+    assert dplan.exec_scene.dilH == sc.stdH, "stride became lhs dilation"
+    assert dplan.spec.sentinel, "lhs-dilated scenes take the sentinel route"
+    wplan = make_plan(sc, ConvOp.WGRAD)
+    assert not wplan.uses_reference
+    assert wplan.exec_scene.fdilH == sc.stdH, "stride-dilated wgrad taps"
+    assert not make_plan(sc, ConvOp.FPROP).uses_reference
+
+
+def test_blocked_dgrad_surfaces_per_op_reference_fallback():
+    """Only the genuinely inexpressible op falls back — per-op metadata."""
+    sc = _scene(*BLOCKED)
     dplan = make_plan(sc, ConvOp.DGRAD)
     assert dplan.uses_reference
     assert dplan.choice is None and dplan.spec is None
-    assert any("strided" in n for n in dplan.notes)
-    wplan = make_plan(sc, ConvOp.WGRAD)
-    assert wplan.uses_reference and any("strided" in n for n in wplan.notes)
-    # the forward of the same scene still runs through Pallas
+    assert any("padding exceeds" in n for n in dplan.notes)
+    # fprop and wgrad of the same scene still dispatch to Pallas
     assert not make_plan(sc, ConvOp.FPROP).uses_reference
+    assert not make_plan(sc, ConvOp.WGRAD).uses_reference
+
+
+def test_forced_policy_on_blocked_op_raises_naming_the_op():
+    sc = _scene(*BLOCKED)
+    with pytest.raises(ValueError, match="dgrad of .* requires a reference"):
+        make_plan(sc, ConvOp.DGRAD, policy="TB88")
+    # the same forced policy on a *strided* forward resolves fine now
+    strided = _scene(*SCENES["strided"])
+    plan = make_plan(strided, ConvOp.DGRAD, policy="TB88")
+    assert plan.schedule == "TB88" and not plan.uses_reference
 
 
 def test_execute_validates_operand_shapes():
@@ -240,14 +268,16 @@ def test_registry_save_load_roundtrip(tmp_path):
     reg = PlanRegistry()
     plain = _scene(*SCENES["plain"])
     strided = _scene(*SCENES["strided"])
+    blocked = _scene(*BLOCKED)
     for op in ConvOp:
         reg.get_or_build(plain, op)
-        reg.get_or_build(strided, op)   # includes reference-fallback plans
+        reg.get_or_build(strided, op)   # dilated-Pallas backward plans
+        reg.get_or_build(blocked, op)   # includes one reference-fallback plan
     path = str(tmp_path / "plans.json")
     reg.save(path)
 
     fresh = PlanRegistry()
-    assert fresh.load(path) == 6
+    assert fresh.load(path) == 9
     assert fresh.plans() == reg.plans()
 
     # warm-started plans execute without any re-resolution
@@ -256,7 +286,53 @@ def test_registry_save_load_roundtrip(tmp_path):
     np.testing.assert_allclose(got, ref.conv_ref(inp, flt, plain),
                                rtol=1e-4, atol=1e-4)
     dplan = fresh.get(strided, ConvOp.DGRAD)
-    assert dplan.uses_reference, "reference fallback survives the roundtrip"
+    assert not dplan.uses_reference, "dilated Pallas dgrad survives pinned"
+    assert dplan.exec_scene.dilH == strided.stdH
+    assert fresh.get(blocked, ConvOp.DGRAD).uses_reference, \
+        "reference fallback survives the roundtrip"
+
+
+def test_registry_merge_on_save_keeps_concurrent_writers(tmp_path):
+    """Two serving processes saving to one artifact union their plans: the
+    second writer must not clobber the first's pinned plans."""
+    path = str(tmp_path / "plans.json")
+    a, b = PlanRegistry(), PlanRegistry()
+    sa = _scene(*SCENES["plain"])
+    sb = _scene(*SCENES["strided"])
+    a.get_or_build(sa)
+    b.get_or_build(sb, ConvOp.DGRAD)
+    a.save(path)
+    b.save(path)     # read-modify-write: a's plan must survive
+    merged = PlanRegistry()
+    assert merged.load(path) == 2
+    assert merged.get(sa) is not None, "first writer's plan survived"
+    assert merged.get(sb, ConvOp.DGRAD) is not None
+    # collision: the in-memory plan wins over the disk copy, no duplication
+    a2 = PlanRegistry()
+    a2.get_or_build(sa)
+    a2.save(path)
+    final = PlanRegistry()
+    assert final.load(path) == 2
+    # malformed/stale disk entries are purged on save, not unioned back
+    # forever: anything load() would skip with a warning must also drop —
+    # including a pre-dilation choice-less DGRAD entry for a strided scene
+    # that now resolves to Pallas (assemble_plan rejects it).
+    import dataclasses, json
+    with open(path) as f:
+        doc = json.load(f)
+    doc["plans"]["v=bogus"] = {"scene": {"B": -1}, "op": "fprop"}
+    doc["plans"]["v=stale"] = {
+        "scene": {f.name: getattr(sb, f.name)
+                  for f in dataclasses.fields(sb)},
+        "op": "dgrad", "policy": "analytic", "interpret": True,
+        "use_pallas": True, "uses_reference": True, "notes": [],
+        "choice": None}
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    a2.save(path)
+    with open(path) as f:
+        kept = json.load(f)["plans"]
+    assert "v=bogus" not in kept and "v=stale" not in kept
 
 
 def test_registry_load_skips_malformed_entries(tmp_path, capsys):
