@@ -6,7 +6,7 @@ import json
 import os
 
 from benchmarks import (batch, calibration, channels, cnns, filters,
-                        granularity, padstride, plans, tuned)
+                        granularity, padstride, plans, serving, tuned)
 from benchmarks.common import emit
 
 
@@ -34,7 +34,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
                          "padstride,cnns,granularity,roofline,tuned,"
-                         "calibration,plans")
+                         "calibration,plans,serving")
     ap.add_argument("--plan", action="store_true",
                     help="also report plan-amortized dispatch overhead "
                          "(plan-once execute vs legacy per-call resolution)")
@@ -43,10 +43,12 @@ def main() -> None:
             "filters": filters.rows, "padstride": padstride.rows,
             "cnns": cnns.rows, "granularity": granularity.rows,
             "roofline": roofline_rows, "tuned": tuned.rows,
-            "calibration": calibration.rows, "plans": plans.rows}
-    # the plans table is opt-in: --plan appends it, --only plans isolates it
-    only = args.only.split(",") if args.only else [m for m in mods
-                                                  if m != "plans"]
+            "calibration": calibration.rows, "plans": plans.rows,
+            "serving": serving.rows}
+    # the plans and serving tables are opt-in (they JIT-warm whole plan
+    # ladders): --plan appends plans, --only plans/serving isolates them
+    only = args.only.split(",") if args.only else [
+        m for m in mods if m not in ("plans", "serving")]
     if args.plan and "plans" not in only:
         only.append("plans")
     print("name,us_per_call,derived")

@@ -1,0 +1,128 @@
+"""Scene-bucketed micro-batched serving vs naive per-request dispatch.
+
+Wall-clocks a mixed single-image burst through a prewarmed ``ConvServer``
+(requests coalesce along B into ladder buckets) against the naive baseline
+a per-request service would run: one B=1 ``ConvPlan.execute`` per request,
+plans equally prewarmed and JIT-warmed, so the delta is pure batching —
+fewer, fatter kernel dispatches — not plan or compile amortization.
+
+Honesty per ``benchmarks/common.py``: CPU-interpret wall times validate
+*relative* behavior (dispatch-count scaling), not TPU truth; scenes are
+channel/spatial-capped paper layers (`cnn_layer_scenes`), stride/pad/
+remainder structure preserved.  Two regimes: ``serving_coalesced`` drains a
+standing burst (occupancy >= 4 requests/dispatch — the win case) and
+``serving_trickle`` drains one request at a time (no coalescing possible —
+the floor, expected ~naive).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.models.cnn import cnn_layer_scenes
+from repro.plan import ConvOp
+from repro.serve import ConvRequest, server_from_scenes
+
+_NETS = ("alexnet", "resnet")
+_CAPS = dict(max_hw=8, max_ch=8, layers_per_net=3)
+
+
+def _burst(layers, count, seed=1):
+    """`count` single-image requests round-robin over the layer list."""
+    names = list(layers)
+    reqs = []
+    for i in range(count):
+        layer = names[i % len(names)]
+        sc = layers[layer]
+        x = jax.random.normal(jax.random.PRNGKey(seed * 10_000 + i),
+                              (sc.inH, sc.inW, sc.IC, 1), jnp.float32)
+        reqs.append(ConvRequest(rid=i, layer=layer, x=x))
+    return reqs
+
+
+def rows(requests: int = 48, max_batch: int = 8):
+    layers = cnn_layer_scenes(_NETS, **_CAPS)
+    # slack=0 keeps the full pow2 ladder: these capped scenes are overhead-
+    # dominated, so model-driven pruning would collapse every family to the
+    # top rung — which is free per the model's lane-quantization argument
+    # but not per interpret-mode CPU wall time, and the trickle regime
+    # should run unpadded here.
+    server = server_from_scenes(layers, max_batch=max_batch,
+                                ladder_slack=0.0, strict=True)
+    built = server.prewarm(compile=True)   # plans + kernel JIT off the clock
+
+    # naive baseline: per-request B=1 plans, same registry, same JIT warmth
+    b1_plans = {name: server.registry.get_or_build(sc.with_batch(1))
+                for name, sc in layers.items()}
+    flts = {name: server._layers[name].flt for name in layers}
+    for name, plan in b1_plans.items():
+        sc = layers[name]
+        jax.block_until_ready(plan.execute(
+            jnp.zeros((sc.inH, sc.inW, sc.IC, 1), jnp.float32), flts[name]))
+
+    def time_naive(reqs):
+        t0 = time.perf_counter()
+        for r in reqs:
+            jax.block_until_ready(b1_plans[r.layer].execute(r.x,
+                                                            flts[r.layer]))
+        return (time.perf_counter() - t0) / len(reqs) * 1e6
+
+    def time_server(reqs, chunk, warm_reqs):
+        """Drain in chunks of `chunk` standing requests (chunk=1 = trickle).
+        The untimed warm burst pays the one-time XLA compile of the
+        coalescing glue (concat/pad/slice shapes) the way steady-state
+        traffic would have — the same hygiene as warming the kernels.
+        Returns (us_per_request, stats-delta of the timed section only),
+        so the derived columns describe exactly the work that was clocked."""
+        for i in range(0, len(warm_reqs), chunk):
+            jax.block_until_ready(server.serve(warm_reqs[i:i + chunk]))
+        s0 = server.stats()
+        t0 = time.perf_counter()
+        for i in range(0, len(reqs), chunk):
+            jax.block_until_ready(server.serve(reqs[i:i + chunk]))
+        us = (time.perf_counter() - t0) / len(reqs) * 1e6
+        s1 = server.stats()
+        lanes = s1["bucket_lanes"] - s0["bucket_lanes"]
+        occ = (s1["occupied_lanes"] - s0["occupied_lanes"]) / max(lanes, 1)
+        return us, {
+            "requests": s1["requests"] - s0["requests"],
+            "dispatches": s1["dispatches"] - s0["dispatches"],
+            "mean_batch": ((s1["requests"] - s0["requests"])
+                           / max(s1["dispatches"] - s0["dispatches"], 1)),
+            "occupancy": occ,
+            "pad_waste_pct": 100.0 * (1.0 - occ),
+            "plan_misses": s1["plan_misses"],
+            "hit_rate": s1["registry"]["hit_rate"],
+        }
+
+    naive_us = time_naive(_burst(layers, requests, seed=2))
+
+    coal_us, s = time_server(_burst(layers, requests, seed=3), requests,
+                             _burst(layers, requests, seed=5))
+    out = [(
+        "serving_coalesced", coal_us,
+        f"naive={naive_us:.1f}us;speedup={naive_us / coal_us:.2f}x;"
+        f"occupancy={s['mean_batch']:.1f}req/dispatch;"
+        f"lane_occupancy={s['occupancy']:.2f};"
+        f"pad_waste={s['pad_waste_pct']:.1f}%;"
+        f"dispatches={s['dispatches']};plans_built={built};"
+        f"plan_misses={s['plan_misses']};"
+        f"hit_rate={s['hit_rate']:.2f}")]
+
+    trickle_us, s2 = time_server(_burst(layers, requests // 2, seed=4), 1,
+                                 _burst(layers, len(layers), seed=6))
+    out.append((
+        "serving_trickle", trickle_us,
+        f"naive={naive_us:.1f}us;speedup={naive_us / trickle_us:.2f}x;"
+        f"occupancy={s2['mean_batch']:.1f}req/dispatch;"
+        f"plan_misses={s2['plan_misses']}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

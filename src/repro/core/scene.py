@@ -125,6 +125,28 @@ class ConvScene:
                 f"|fdil={self.fdilH},{self.fdilW}"
                 f"|apad={self.apadH},{self.apadW}")
 
+    # -- batch-family identity (serving coalesces along B) ---------------------
+    def with_batch(self, b: int) -> "ConvScene":
+        """The same scene rebatched to ``B = b`` — the serving layer's
+        rebucketing primitive.  Batch is the MM_unit N dim: every other
+        axis (spatial, channels, stride, padding, dilation, dtype) is
+        untouched, so two requests whose scenes differ only here can share
+        one batched ``ConvPlan.execute``."""
+        return self if b == self.B else dataclasses.replace(self, B=b)
+
+    def family_key(self) -> str:
+        """B-agnostic scene identity: everything that changes the executable
+        *except* the batch size.  Two scenes with equal family keys are the
+        same convolution at different batch sizes (``with_batch`` maps
+        between them), which is exactly the coalescing unit of the serving
+        layer's bucket ladder.  Dtype-alias-stable via numpy dtype names;
+        the dilation axes ride the shared ``dilation_suffix`` fragment."""
+        dt = jnp.dtype(self.dtype).name
+        return (f"ic={self.IC}|oc={self.OC}|in={self.inH}x{self.inW}"
+                f"|flt={self.fltH}x{self.fltW}|pad={self.padH},{self.padW}"
+                f"|std={self.stdH},{self.stdW}|dt={dt}"
+                f"{self.dilation_suffix()}")
+
     # -- MM_unit dims (paper §4.1.1) ------------------------------------------
     @property
     def M(self) -> int:  # noqa: N802  (paper symbol)

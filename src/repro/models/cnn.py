@@ -71,6 +71,41 @@ def cnn_scenes(batch: int = 128) -> Dict[str, List[ConvScene]]:
     }
 
 
+def cnn_layer_scenes(nets=None, batch: int = 1, *,
+                     max_hw: int = 0, max_ch: int = 0,
+                     layers_per_net: int = 0) -> Dict[str, ConvScene]:
+    """Flat ``{"net/L<i>": scene}`` over the paper CNNs — the serving
+    layer list (``repro.serve.conv`` prewarms straight from it).
+
+    ``max_hw``/``max_ch`` cap spatial/channel dims via the tune subsystem's
+    proxy convention (``tune.measure.proxy_scene``): the cap keeps the
+    filter window valid and preserves each layer's stride/pad/remainder
+    structure, so interpret-mode CPU serving demos and CI bursts stay
+    feasible while still exercising the awkward layers (AlexNet's 11x11/s4
+    remainder entry, the 7x7/s2 stems, pointwise projections).  0 = full
+    paper scenes.  ``layers_per_net`` truncates each net's list (0 = all).
+    """
+    all_scenes = cnn_scenes(batch)
+    nets = tuple(all_scenes) if nets is None else tuple(nets)
+    out: Dict[str, ConvScene] = {}
+    for net in nets:
+        if net not in all_scenes:
+            raise KeyError(f"unknown net {net!r}; have {sorted(all_scenes)}")
+        layers = all_scenes[net]
+        if layers_per_net:
+            layers = layers[:layers_per_net]
+        for i, sc in enumerate(layers):
+            if max_hw or max_ch:
+                # the tune proxy already knows how to shrink a scene while
+                # keeping the filter window valid — reuse it, lazily so the
+                # uncapped path never touches the tune subsystem
+                from repro.tune.measure import proxy_scene
+                sc = proxy_scene(sc, measure_max_ch=max_ch or None,
+                                 measure_max_hw=max_hw or None)
+            out[f"{net}/L{i}"] = sc
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Small runnable classifier on MG3MConv (end-to-end example / tests)
 # ---------------------------------------------------------------------------

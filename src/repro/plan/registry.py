@@ -17,7 +17,8 @@ import json
 import os
 import sys
 import tempfile
-from typing import Dict, Optional, Union
+import threading
+from typing import Dict, Iterable, Optional, Sequence, Union
 
 import jax.numpy as jnp
 
@@ -92,21 +93,36 @@ def valid_plan_dict(d) -> bool:
 
 
 class PlanRegistry:
-    """LRU-bounded map: plan signature -> frozen ``ConvPlan``."""
+    """LRU-bounded map: plan signature -> frozen ``ConvPlan``.
+
+    Thread-safe: every public operation holds one reentrant lock, so
+    concurrent submitters (a serving process coalescing traffic from many
+    client threads) can't corrupt the ``OrderedDict`` LRU mid-``move_to_end``
+    or under-count the hit/miss/eviction stats (``+= 1`` on an attribute is
+    a read-modify-write race without it).  ``get_or_build`` holds the lock
+    across the build too: two threads racing the same miss produce one plan,
+    one miss, and one identical object — never a duplicate ``make_plan``.
+    The lock also spans ``save``'s read-merge-write window, so two threads
+    of one process can't interleave their merges (cross-*process* saves
+    remain lock-free merge-on-save, as documented on ``save``).
+    """
 
     def __init__(self, *, max_plans: int = 1024):
         self.max_plans = max_plans
         self._mem: "collections.OrderedDict[str, ConvPlan]" = \
             collections.OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._mem)
+        with self._lock:
+            return len(self._mem)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._mem
+        with self._lock:
+            return key in self._mem
 
     def key(self, scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP,
             policy: PolicySpec = "analytic", interpret: bool = True,
@@ -119,50 +135,112 @@ class PlanRegistry:
             use_pallas: bool = True) -> Optional[ConvPlan]:
         """Registered plan, or None on miss (LRU-touching)."""
         k = self.key(scene, op, policy, interpret, use_pallas)
-        plan = self._mem.get(k)
-        if plan is None:
-            self.misses += 1
-            return None
-        self._mem.move_to_end(k)
-        self.hits += 1
-        return plan
+        with self._lock:
+            plan = self._mem.get(k)
+            if plan is None:
+                self.misses += 1
+                return None
+            self._mem.move_to_end(k)
+            self.hits += 1
+            return plan
 
     def put(self, plan: ConvPlan) -> str:
         k = plan_signature(plan.scene, plan.op, plan.policy, plan.interpret,
                            plan.use_pallas)
-        self._mem[k] = plan
-        self._mem.move_to_end(k)
-        self._evict()
+        with self._lock:
+            self._mem[k] = plan
+            self._mem.move_to_end(k)
+            self._evict()
         return k
 
     def get_or_build(self, scene: ConvScene,
                      op: Union[ConvOp, str] = ConvOp.FPROP, *,
                      policy: PolicySpec = "analytic", interpret: bool = True,
                      use_pallas: bool = True) -> ConvPlan:
-        """The plan-once entry: registry hit, or ``make_plan`` + register."""
-        plan = self.get(scene, op, policy=policy, interpret=interpret,
+        """The plan-once entry: registry hit, or ``make_plan`` + register.
+        Atomic under the registry lock: concurrent callers racing the same
+        miss serialize through one build and all receive the same plan.
+        Holding the lock across the build is deliberate: ``make_plan``
+        never measures (even ``policy="tuned"`` is a cache lookup with an
+        analytic fallback), so the critical section is bounded by selector
+        math — cheap enough that same-key dedup beats per-key locking."""
+        with self._lock:
+            plan = self.get(scene, op, policy=policy, interpret=interpret,
+                            use_pallas=use_pallas)
+            if plan is None:
+                plan = make_plan(scene, op, policy=policy, interpret=interpret,
+                                 use_pallas=use_pallas)
+                self.put(plan)
+            return plan
+
+    def warm(self, scenes: Iterable[ConvScene],
+             ops: Sequence[Union[ConvOp, str]] = (ConvOp.FPROP,),
+             buckets: Optional[Sequence[int]] = None, *,
+             policy: PolicySpec = "analytic", interpret: bool = True,
+             use_pallas: bool = True) -> int:
+        """Pre-build every (scene x op x bucket) plan not already registered;
+        returns how many were built.  ``buckets`` rebatches each scene to
+        every given batch size (``ConvScene.with_batch``) — the serving
+        bucket-ladder warm path; ``None`` keeps each scene's own batch.
+
+        On return the *entire* warmed set is resident: already-present keys
+        are LRU-touched (not skipped), so this warm's plans are the most
+        recently used and eviction falls on unrelated entries first; a
+        warmed set larger than ``max_plans`` raises ``ValueError`` up front
+        rather than silently evicting plans it just built (a strict server
+        would pass prewarm and then miss on the first request).
+
+        Warming is deliberate, not traffic: it bumps neither ``hits`` nor
+        ``misses``, so "zero plan misses after prewarm" is assertable from
+        ``stats()`` without snapshot arithmetic."""
+        built = 0
+        with self._lock:
+            work = []
+            for scene in scenes:
+                for b in (buckets if buckets else (scene.B,)):
+                    rebatched = scene.with_batch(b)
+                    for op in ops:
+                        work.append((rebatched, op,
+                                     self.key(rebatched, op, policy,
+                                              interpret, use_pallas)))
+            if len({k for _, _, k in work}) > self.max_plans:
+                raise ValueError(
+                    f"cannot warm {len({k for _, _, k in work})} plans into "
+                    f"a registry bounded at max_plans={self.max_plans}: the "
+                    f"LRU would evict part of the warmed set before it is "
+                    f"ever served; raise max_plans or shrink the "
+                    f"(scenes x ops x buckets) ladder")
+            for rebatched, op, k in work:
+                if k not in self._mem:
+                    self._mem[k] = make_plan(
+                        rebatched, op, policy=policy, interpret=interpret,
                         use_pallas=use_pallas)
-        if plan is None:
-            plan = make_plan(scene, op, policy=policy, interpret=interpret,
-                             use_pallas=use_pallas)
-            self.put(plan)
-        return plan
+                    built += 1
+                self._mem.move_to_end(k)
+            self._evict()
+        return built
 
     def _evict(self) -> None:
+        # callers hold self._lock (all public entry points do)
         while len(self._mem) > self.max_plans:
             self._mem.popitem(last=False)  # least-recently used
             self.evictions += 1
 
     def clear(self) -> None:
-        self._mem.clear()
+        with self._lock:
+            self._mem.clear()
 
-    def stats(self) -> Dict[str, int]:
-        return {"size": len(self._mem), "hits": self.hits,
-                "misses": self.misses, "evictions": self.evictions}
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            lookups = self.hits + self.misses
+            return {"size": len(self._mem), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "hit_rate": self.hits / lookups if lookups else 0.0}
 
     def plans(self) -> Dict[str, ConvPlan]:
         """Snapshot of signature -> plan."""
-        return dict(self._mem)
+        with self._lock:
+            return dict(self._mem)
 
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> str:
@@ -178,6 +256,10 @@ class PlanRegistry:
         writer added in between (last rename wins); the merge closes the
         common sequential-clobber case, it is not a locking guarantee."""
         p = os.path.abspath(os.path.expanduser(path))
+        with self._lock:
+            return self._save_locked(p)
+
+    def _save_locked(self, p: str) -> str:
         plans = {k: plan_to_dict(pl) for k, pl in self._mem.items()}
         if os.path.exists(p):
             try:
@@ -213,21 +295,22 @@ class PlanRegistry:
             doc = json.load(f)
         loaded = 0
         skipped = []
-        for k, d in doc.get("plans", {}).items():
-            try:
-                plan = plan_from_dict(d)
-            except (KeyError, TypeError, ValueError) as e:
-                skipped.append((k, e))
-                continue
-            self._mem[k] = plan
-            self._mem.move_to_end(k)
-            loaded += 1
+        with self._lock:
+            for k, d in doc.get("plans", {}).items():
+                try:
+                    plan = plan_from_dict(d)
+                except (KeyError, TypeError, ValueError) as e:
+                    skipped.append((k, e))
+                    continue
+                self._mem[k] = plan
+                self._mem.move_to_end(k)
+                loaded += 1
+            self._evict()
         if skipped:
             print(f"repro.plan: skipped {len(skipped)} malformed plan "
                   f"entr{'y' if len(skipped) == 1 else 'ies'} in {p} "
                   f"(first: {skipped[0][0]!r}: {skipped[0][1]})",
                   file=sys.stderr)
-        self._evict()
         return loaded
 
 

@@ -1,0 +1,15 @@
+"""repro.serve — serving engines.
+
+``repro.serve.conv`` is the scene-bucketed micro-batching conv server
+(plan-prewarmed, coalescing along the batch axis); ``repro.serve.engine``
+is the LM continuous-batching engine.  The LM engine drags the transformer
+stack along, so it is intentionally *not* re-exported here — import
+``repro.serve.engine`` explicitly.
+"""
+from repro.serve.conv import (ConvRequest, ConvServer, DispatchRecord,
+                              bucket_ladder, server_from_scenes)
+
+__all__ = [
+    "ConvRequest", "ConvServer", "DispatchRecord", "bucket_ladder",
+    "server_from_scenes",
+]

@@ -1,0 +1,503 @@
+"""Scene-bucketed micro-batching conv serving engine with plan prewarming.
+
+The paper's claim is *adaptability across convolution scenes*; a serving
+process meets traffic that varies only along one axis the selector already
+understands — batch.  ``ConvServer`` turns that into the execution shape the
+multi-grained selector scores best:
+
+  * each registered layer defines a scene *family* (``ConvScene.family_key``,
+    B-agnostic); concurrent requests against one layer differ only in batch
+    size, so they coalesce along the B axis (the MM_unit N dim — independent
+    GEMM columns, bitwise-safe to pack and slice) into one batched
+    ``ConvPlan.execute``;
+  * coalesced batches pad up to a **bucket ladder** of batch sizes chosen
+    per scene family from the ``CostModel``: a ladder rung is dropped when
+    the model predicts the next rung costs no more to run
+    (``predicted_s`` within ``ladder_slack``), i.e. the rung sits below the
+    chosen schedule's granularity sweet spot and the MXU would burn the
+    lane-quantized work anyway — padding up is free, and fewer buckets mean
+    fewer plans and fatter batches;
+  * at startup the server prewarms every (layer x op x bucket) plan into a
+    thread-safe ``PlanRegistry`` (``PlanRegistry.warm``) from a model's
+    scene list (``models.cnn.cnn_layer_scenes``) or a saved registry
+    artifact, so steady-state serving is pure kernel dispatch: zero plan
+    builds, zero schedule resolutions (``stats()['plan_misses']`` stays 0,
+    assertable; ``on_dispatch`` is the audit hook).
+
+Padding lanes are zeros: a zero batch column produces a zero output column
+for FPROP/DGRAD (both are linear in the batched operand), sliced off before
+the request completes, so coalesced output matches per-request execution.
+WGRAD *contracts over* B — batching requests along B would sum their
+gradients — so the server refuses it; use ``ConvPlan`` directly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import os
+import threading
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapping import (CostModel, predicted_efficiency,
+                                select_schedule)
+from repro.core.scene import ConvScene
+from repro.plan import ConvOp, ConvPlan, PlanRegistry, make_plan
+from repro.plan.build import PolicySpec, _active_cost_model
+
+
+# --------------------------------------------------------------------------
+# bucket ladder — batch buckets per scene family, chosen by the cost model
+# --------------------------------------------------------------------------
+def bucket_ladder(scene: ConvScene, max_batch: int, *, min_bucket: int = 1,
+                  slack: float = 1.15,
+                  model: Optional[CostModel] = None) -> Tuple[int, ...]:
+    """Batch buckets for one scene family: power-of-two rungs from
+    ``min_bucket`` up, capped by ``max_batch`` (always the top rung), pruned
+    bottom-up by the cost model.
+
+    A rung ``b`` is dropped when the model predicts the next *surviving*
+    rung runs within ``slack`` of it
+    (``predicted_s(next_kept) <= slack * predicted_s(b)``): below the
+    selected schedule's granularity sweet spot the MXU's lane/sublane
+    quantization burns the bigger batch's work anyway (a compute-bound
+    scene costs the same at B=8 and B=64), so padding those requests up to
+    the rung they will actually execute at is ~free and the ladder should
+    not hold a plan below it.  The comparison is deliberately against the
+    kept rung, not the adjacent one — pairwise-adjacent pruning would let
+    sub-``slack`` ratios compound (seven 1.12x steps ≈ 2.2x) and collapse
+    ladders whose cumulative padding cost is far from free.  Memory-bound
+    families, whose time scales with B, keep the full ladder.
+    ``model=None`` uses the active (calibrated when an artifact exists)
+    cost model, like plan building does.
+    """
+    if max_batch < 1 or min_bucket < 1:
+        raise ValueError("max_batch and min_bucket must be positive")
+    if min_bucket > max_batch:
+        raise ValueError(f"min_bucket {min_bucket} exceeds max_batch "
+                         f"{max_batch}")
+    model = model if model is not None else _active_cost_model()
+    rungs = []
+    b = min_bucket
+    while b < max_batch:
+        rungs.append(b)
+        b *= 2
+    rungs.append(max_batch)
+    if slack <= 0:
+        return tuple(rungs)   # pruning is provably a no-op: skip the
+        # per-rung schedule resolutions entirely
+    times = {b: select_schedule(scene.with_batch(b), model=model).predicted_s
+             for b in rungs}
+    # top-down: keep a rung iff padding it up to the lowest kept rung above
+    # it is NOT within slack (the invariant holds against the bucket a
+    # request would actually execute at, never a pruned intermediate)
+    kept = [rungs[-1]]
+    for b in reversed(rungs[:-1]):
+        if times[kept[0]] > slack * times[b]:
+            kept.insert(0, b)
+    return tuple(kept)
+
+
+# --------------------------------------------------------------------------
+# requests and dispatch records
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class ConvRequest:
+    """One unit of per-request conv work: an input tensor against a
+    registered layer.  ``x`` is in the paper layout with a trailing batch
+    axis — ``[inH, inW, IC, b]`` for FPROP, ``[outH, outW, OC, b]`` for
+    DGRAD — or 3-D (no batch axis) meaning ``b = 1``, in which case the
+    result comes back 3-D too.  ``out``, ``done``, and (on a failed
+    dispatch) ``error`` are filled by the server on completion.
+
+    ``eq=False``: requests are identity objects.  A value ``__eq__`` would
+    compare the jax arrays (ambiguous truth value) and would let two
+    requests with equal fields alias each other in the queue."""
+
+    rid: int
+    layer: str
+    x: jax.Array
+    op: ConvOp = ConvOp.FPROP
+    out: Optional[jax.Array] = None
+    done: bool = False
+    error: Optional[BaseException] = None
+    # internal: batch width, whether to squeeze the result (3-D input), and
+    # the completion signal serve() waits on (set by whichever thread's
+    # step() dispatches the batch containing this request)
+    _b: int = dataclasses.field(default=0, repr=False)
+    _squeeze: bool = dataclasses.field(default=False, repr=False)
+    _event: Optional[threading.Event] = dataclasses.field(default=None,
+                                                          repr=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One coalesced kernel dispatch — the audit unit of the serving layer
+    (``on_dispatch`` receives these)."""
+
+    layer: str
+    op: ConvOp
+    bucket: int        # padded batch the plan executed
+    occupied: int      # real request lanes in the bucket
+    requests: int      # how many requests were coalesced
+    schedule: Optional[str]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Family:
+    """One registered layer: its B-agnostic scene family, weight, ladder."""
+
+    layer: str
+    base: ConvScene               # canonical B=1 member of the family
+    flt: jax.Array
+    ops: Tuple[ConvOp, ...]
+    ladder: Tuple[int, ...]
+
+    def a_spatial(self, op: ConvOp) -> Tuple[int, int, int]:
+        """Expected leading (non-batch) dims of a request tensor."""
+        if op is ConvOp.FPROP:
+            return (self.base.inH, self.base.inW, self.base.IC)
+        return (self.base.outH, self.base.outW, self.base.OC)
+
+
+# --------------------------------------------------------------------------
+# the server
+# --------------------------------------------------------------------------
+class ConvServer:
+    """Scene-bucketed micro-batching conv server over a prewarmed
+    ``PlanRegistry``.
+
+    Lifecycle: ``register_layer`` every (scene, weight) the model serves,
+    ``prewarm()`` once (optionally from a saved registry artifact), then
+    ``submit``/``drain`` — or ``serve(requests)`` for both — from any number
+    of threads.  ``step()`` coalesces the longest eligible run of queued
+    requests for one (layer, op) along the B axis, pads to the family's
+    bucket ladder, executes the prewarmed plan, and slices each request's
+    lanes back out.
+
+    ``strict=True`` turns any post-warm plan miss into a ``RuntimeError``
+    (production posture: steady state must be pure dispatch); the default
+    builds the missing plan and counts it in ``stats()['plan_builds']``.
+    """
+
+    def __init__(self, *, registry: Optional[PlanRegistry] = None,
+                 policy: PolicySpec = "analytic", interpret: bool = True,
+                 use_pallas: bool = True, max_batch: int = 32,
+                 min_bucket: int = 1, ladder_slack: float = 1.15,
+                 cost_model: Optional[CostModel] = None, strict: bool = False,
+                 on_dispatch: Optional[Callable[[DispatchRecord], None]]
+                 = None):
+        self.registry = registry if registry is not None else PlanRegistry()
+        self.policy = policy
+        self.interpret = interpret
+        self.use_pallas = use_pallas
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.ladder_slack = ladder_slack
+        self.cost_model = cost_model
+        self.strict = strict
+        self.on_dispatch = on_dispatch
+        self._lock = threading.RLock()
+        self._layers: Dict[str, _Family] = {}
+        self._queue: "collections.deque[ConvRequest]" = collections.deque()
+        self._seq = itertools.count()
+        self._warmed = False
+        # serving counters (post-warm steady state)
+        self._requests_served = 0
+        self._dispatches = 0
+        self._occupied_lanes = 0
+        self._bucket_lanes = 0
+        self._plan_misses = 0
+        self._plan_builds = 0
+
+    # -- setup -------------------------------------------------------------
+    def register_layer(self, layer: str, scene: ConvScene, flt: jax.Array,
+                       ops: Sequence[ConvOp] = (ConvOp.FPROP,)) -> _Family:
+        """Register one servable layer: scene family + weight.  Layers whose
+        scenes share a ``family_key`` automatically share ladder plans in
+        the registry (identical rebatched scenes produce identical plan
+        signatures) — weights stay per-layer, so only the *plans* dedup."""
+        ops = tuple(ConvOp(op) for op in ops)
+        if ConvOp.WGRAD in ops:
+            raise ValueError(
+                "wgrad contracts over the batch axis — coalescing requests "
+                "along B would sum their gradients; serve wgrad through "
+                "ConvPlan directly")
+        if flt.shape != scene.flt_shape():
+            raise ValueError(
+                f"layer {layer!r} weight shape {flt.shape} does not match "
+                f"the scene's FLT layout {scene.flt_shape()}")
+        base = scene.with_batch(1)
+        ladder = bucket_ladder(base, self.max_batch,
+                               min_bucket=self.min_bucket,
+                               slack=self.ladder_slack, model=self.cost_model)
+        fam = _Family(layer=layer, base=base, flt=flt, ops=ops, ladder=ladder)
+        with self._lock:
+            if layer in self._layers:
+                raise ValueError(f"layer {layer!r} already registered")
+            self._layers[layer] = fam
+            self._warmed = False
+        return fam
+
+    def prewarm(self, artifact: Optional[str] = None, *,
+                compile: bool = False) -> int:
+        """Build every (layer x op x bucket) plan the server can dispatch;
+        returns how many plans were built (0 = everything was already
+        pinned).  ``artifact`` loads a saved registry first, so a restarted
+        server re-resolves nothing — loaded plans are pinned choices and
+        ``warm`` only fills genuine gaps.  ``compile=True`` additionally
+        executes each servable plan once on zeros, paying kernel JIT before
+        traffic instead of inside the first request's latency."""
+        if artifact and os.path.exists(artifact):
+            self.registry.load(artifact)
+        built = 0
+        with self._lock:
+            families = list(self._layers.values())
+        for fam in families:
+            built += self.registry.warm(
+                [fam.base], ops=fam.ops, buckets=fam.ladder,
+                policy=self.policy, interpret=self.interpret,
+                use_pallas=self.use_pallas)
+        if compile:
+            for fam in families:
+                for op, bucket in itertools.product(fam.ops, fam.ladder):
+                    plan = self._plan(fam, op, bucket)
+                    a_shape = fam.a_spatial(op) + (bucket,)
+                    jax.block_until_ready(plan.execute(
+                        jnp.zeros(a_shape, fam.base.dtype), fam.flt))
+        with self._lock:
+            self._warmed = True
+        return built
+
+    def save(self, path: str) -> str:
+        """Persist the plan repository as the prewarm artifact of the next
+        server process (see ``prewarm(artifact=...)``)."""
+        return self.registry.save(path)
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, req: ConvRequest) -> ConvRequest:
+        """Enqueue one request (thread-safe).  Validates the tensor against
+        the registered family up front so bad requests fail loudly at
+        submission, not inside a coalesced batch."""
+        with self._lock:
+            fam = self._layers.get(req.layer)
+            warmed = self._warmed
+        if fam is None:
+            raise KeyError(f"unknown layer {req.layer!r}; registered: "
+                           f"{sorted(self._layers)}")
+        if not warmed:
+            self.prewarm()
+        req.op = ConvOp(req.op)
+        if req.op not in fam.ops:
+            raise ValueError(f"layer {req.layer!r} serves ops "
+                             f"{[o.value for o in fam.ops]}, not "
+                             f"{req.op.value}")
+        x = jnp.asarray(req.x)
+        if x.ndim == 3:
+            x = x[..., None]
+            req._squeeze = True
+        want = fam.a_spatial(req.op)
+        if x.ndim != 4 or x.shape[:3] != want:
+            raise ValueError(
+                f"request {req.rid} for layer {req.layer!r} ({req.op.value}) "
+                f"expects a [{want[0]}, {want[1]}, {want[2]}, b] tensor, "
+                f"got {tuple(req.x.shape)}")
+        if x.shape[3] > fam.ladder[-1]:
+            raise ValueError(
+                f"request {req.rid} batch {x.shape[3]} exceeds the top "
+                f"ladder bucket {fam.ladder[-1]} of layer {req.layer!r}; "
+                f"split it or raise max_batch")
+        req.x = x.astype(jnp.dtype(fam.base.dtype))
+        req._b = x.shape[3]
+        req.out, req.done, req.error = None, False, None
+        req._event = threading.Event()
+        with self._lock:
+            self._queue.append(req)
+        return req
+
+    # -- dispatch ----------------------------------------------------------
+    def _take_batch(self) -> List[ConvRequest]:
+        """Pop the head request plus every queued request of the same
+        (layer, op) that still fits under the family's top bucket — FIFO
+        fairness across families, maximal coalescing within one."""
+        with self._lock:
+            if not self._queue:
+                return []
+            head = self._queue.popleft()
+            cap = self._layers[head.layer].ladder[-1]
+            group, total = [head], head._b
+            for r in list(self._queue):
+                if (r.layer == head.layer and r.op == head.op
+                        and total + r._b <= cap):
+                    self._queue.remove(r)
+                    group.append(r)
+                    total += r._b
+            return group
+
+    def _plan(self, fam: _Family, op: ConvOp, bucket: int) -> ConvPlan:
+        plan = self.registry.get(fam.base.with_batch(bucket), op,
+                                 policy=self.policy, interpret=self.interpret,
+                                 use_pallas=self.use_pallas)
+        if plan is None:
+            with self._lock:
+                self._plan_misses += 1
+            if self.strict:
+                raise RuntimeError(
+                    f"post-warm plan miss: layer {fam.layer!r} {op.value} "
+                    f"bucket {bucket} is not in the registry (strict mode "
+                    f"forbids steady-state plan builds)")
+            # build + put directly: re-entering get_or_build would record
+            # the same miss twice and deflate the registry's hit_rate
+            plan = make_plan(fam.base.with_batch(bucket), op,
+                             policy=self.policy, interpret=self.interpret,
+                             use_pallas=self.use_pallas)
+            self.registry.put(plan)
+            with self._lock:
+                self._plan_builds += 1
+        return plan
+
+    def step(self) -> int:
+        """Coalesce and dispatch one micro-batch; returns requests served
+        (0 = queue empty)."""
+        group = self._take_batch()
+        if not group:
+            return 0
+        try:
+            fam = self._layers[group[0].layer]
+            op = group[0].op
+            total = sum(r._b for r in group)
+            bucket = next(b for b in fam.ladder if b >= total)
+            x = (group[0].x if len(group) == 1
+                 else jnp.concatenate([r.x for r in group], axis=3))
+            if bucket > total:
+                x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, bucket - total)))
+            plan = self._plan(fam, op, bucket)
+            out = plan.execute(x, fam.flt)
+        except BaseException as e:
+            # the group is already off the queue: complete it with the
+            # error so a serve() waiting in another thread unblocks
+            for r in group:
+                r.error, r.done = e, True
+                if r._event is not None:
+                    r._event.set()
+            raise
+        off = 0
+        for r in group:
+            sl = out[..., off:off + r._b]
+            off += r._b
+            r.out = sl[..., 0] if r._squeeze else sl
+            r.done = True
+            if r._event is not None:
+                r._event.set()
+        with self._lock:
+            self._requests_served += len(group)
+            self._dispatches += 1
+            self._occupied_lanes += total
+            self._bucket_lanes += bucket
+        if self.on_dispatch is not None:
+            self.on_dispatch(DispatchRecord(
+                layer=fam.layer, op=op, bucket=bucket, occupied=total,
+                requests=len(group), schedule=plan.schedule))
+        return len(group)
+
+    def drain(self) -> int:
+        """Serve until the queue is empty; returns requests served."""
+        served = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return served
+            served += n
+
+    def serve(self, requests: Sequence[ConvRequest]) -> List[jax.Array]:
+        """Submit a burst, drain it, return outputs in request order.
+
+        Waits on each request's completion signal, not merely on an empty
+        queue: with several threads draining one server, this burst's
+        requests may be mid-``execute`` inside *another* thread's step when
+        our drain sees no queued work.  A request completed with an error
+        (a concurrent step failed its batch) re-raises here."""
+        for req in requests:
+            self.submit(req)
+        self.drain()
+        for req in requests:
+            if req._event is not None:
+                req._event.wait()
+            if req.error is not None:
+                raise RuntimeError(
+                    f"request {req.rid} failed in a coalesced dispatch"
+                ) from req.error
+        return [r.out for r in requests]
+
+    # -- introspection -----------------------------------------------------
+    def ladders(self) -> Dict[str, Tuple[int, ...]]:
+        with self._lock:
+            return {name: fam.ladder for name, fam in self._layers.items()}
+
+    def stats(self) -> Dict[str, float]:
+        """Serving counters + the registry's.  ``occupancy`` is real lanes /
+        padded lanes over all dispatches (1.0 = no pad waste);
+        ``pad_waste_pct`` is its complement; ``plan_misses`` must stay 0 on
+        a prewarmed server."""
+        with self._lock:
+            occ = (self._occupied_lanes / self._bucket_lanes
+                   if self._bucket_lanes else 0.0)
+            return {
+                "requests": self._requests_served,
+                "dispatches": self._dispatches,
+                "mean_batch": (self._requests_served / self._dispatches
+                               if self._dispatches else 0.0),
+                "occupancy": occ,
+                "pad_waste_pct": 100.0 * (1.0 - occ) if self._bucket_lanes
+                                 else 0.0,
+                # raw lane counters, so callers can window stats (delta of
+                # two snapshots) instead of reading lifetime aggregates
+                "occupied_lanes": self._occupied_lanes,
+                "bucket_lanes": self._bucket_lanes,
+                "plan_misses": self._plan_misses,
+                "plan_builds": self._plan_builds,
+                "queued": len(self._queue),
+                "registry": self.registry.stats(),
+            }
+
+    def describe(self) -> str:
+        """One line per family: ladder and per-rung predicted efficiency."""
+        model = (self.cost_model if self.cost_model is not None
+                 else _active_cost_model())
+        lines = []
+        with self._lock:
+            families = sorted(self._layers.items())
+        for name, fam in families:
+            effs = []
+            for b in fam.ladder:
+                sc = fam.base.with_batch(b)
+                ch = select_schedule(sc, model=model)
+                effs.append(f"{b}:{ch.schedule}"
+                            f"@{predicted_efficiency(sc, ch, model):.2f}")
+            lines.append(f"{name}: family[{fam.base.family_key()}] "
+                         f"ladder[{' '.join(effs)}]")
+        return "\n".join(lines)
+
+
+def server_from_scenes(scenes: Mapping[str, ConvScene],
+                       weights: Optional[Mapping[str, jax.Array]] = None,
+                       *, seed: int = 0, ops: Sequence[ConvOp]
+                       = (ConvOp.FPROP,), **kwargs) -> ConvServer:
+    """Build a ``ConvServer`` straight from a layer->scene map (e.g.
+    ``models.cnn.cnn_layer_scenes``).  Missing weights are seeded randomly —
+    the serving layer only needs *a* weight per layer to route traffic;
+    real deployments pass trained ones."""
+    server = ConvServer(**kwargs)
+    for i, (layer, scene) in enumerate(scenes.items()):
+        if weights is not None and layer in weights:
+            flt = weights[layer]
+        else:
+            key = jax.random.PRNGKey(seed + i)
+            flt = jax.random.normal(key, scene.flt_shape(),
+                                    jnp.float32).astype(
+                                        jnp.dtype(scene.dtype))
+        server.register_layer(layer, scene, flt, ops=ops)
+    return server

@@ -201,7 +201,8 @@ def test_registry_hit_miss_and_identity():
     p1 = reg.get_or_build(sc)
     p2 = reg.get_or_build(sc)
     assert p1 is p2, "a registry hit returns the same frozen plan"
-    assert reg.stats() == {"size": 1, "hits": 1, "misses": 2, "evictions": 0}
+    assert reg.stats() == {"size": 1, "hits": 1, "misses": 2, "evictions": 0,
+                           "hit_rate": 1 / 3}
     # a different op / policy / dtype is a different plan
     reg.get_or_build(sc, ConvOp.DGRAD)
     reg.get_or_build(sc, policy="TB88")

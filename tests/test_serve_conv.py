@@ -1,0 +1,484 @@
+"""Scene-bucketed micro-batching serving: coalesced output parity vs
+per-request ``ConvPlan`` execution across all six paper CNNs, the
+prewarmed zero-miss / zero-resolution steady-state contract, bucket-ladder
+model pruning, and ``PlanRegistry`` thread-safety + ladder coverage
+(LRU under a ladder, ``hit_rate``, save/load round-trip)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.plan.build as build_mod
+from repro.core.scene import ConvScene
+from repro.models.cnn import cnn_layer_scenes
+from repro.plan import ConvOp, PlanRegistry, make_plan
+from repro.serve import (ConvRequest, ConvServer, bucket_ladder,
+                         server_from_scenes)
+
+# Capped paper layers (tune-proxy convention): stride/pad/remainder
+# structure preserved, interpret-mode CPU feasible.
+CAPS = dict(max_hw=8, max_ch=8, layers_per_net=2)
+ALL_NETS = ("alexnet", "vgg", "googlenet", "resnet", "squeezenet", "yolo")
+
+
+def _x(scene, b, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (scene.inH, scene.inW, scene.IC, b), jnp.float32)
+
+
+# -- scene family primitives -------------------------------------------------
+def test_with_batch_and_family_key():
+    sc = ConvScene(B=8, IC=3, OC=16, inH=10, inW=10, fltH=3, fltW=3,
+                   padH=1, padW=1, stdH=2, stdW=2)
+    rb = sc.with_batch(32)
+    assert rb.B == 32
+    assert {f: getattr(rb, f) for f in sc.__dataclass_fields__ if f != "B"} \
+        == {f: getattr(sc, f) for f in sc.__dataclass_fields__ if f != "B"}
+    assert sc.with_batch(8) is sc, "same batch returns the same scene"
+    assert sc.family_key() == rb.family_key(), "family identity is B-agnostic"
+    other = ConvScene(B=8, IC=3, OC=16, inH=10, inW=10, fltH=3, fltW=3,
+                      padH=1, padW=1)
+    assert sc.family_key() != other.family_key(), "stride is family identity"
+    dil = ConvScene(B=8, IC=3, OC=16, inH=10, inW=10, fltH=3, fltW=3,
+                    padH=1, padW=1, stdH=2, stdW=2, dilH=2, dilW=2)
+    assert dil.family_key() != sc.family_key(), "dilation is family identity"
+
+
+def test_bucket_ladder_model_pruning():
+    # slack=0 disables pruning: the full pow2 ladder survives
+    tiny = ConvScene(B=1, IC=8, OC=8, inH=8, inW=8, fltH=3, fltW=3,
+                     padH=1, padW=1)
+    assert bucket_ladder(tiny, 128, slack=0.0) == (1, 2, 4, 8, 16, 32, 64, 128)
+    assert bucket_ladder(tiny, 48, slack=0.0) == (1, 2, 4, 8, 16, 32, 48)
+    # a heavily lane-quantized compute-bound family costs the model the same
+    # at any B <= 128 -> every rung below the top is below the granularity
+    # sweet spot and gets pruned (padding up is free)
+    pw = ConvScene(B=1, IC=1024, OC=512, inH=14, inW=14, fltH=1, fltW=1)
+    assert bucket_ladder(pw, 128) == (128,)
+    # a memory-bound small-channel family scales with B -> low rungs survive
+    ladder = bucket_ladder(tiny, 128)
+    assert len(ladder) >= 2 and ladder[-1] == 128 and ladder[0] < 128
+    # pruned ladders are subsequences of the full one, capped by max_batch
+    assert set(ladder) <= set(bucket_ladder(tiny, 128, slack=0.0))
+    assert bucket_ladder(tiny, 128, min_bucket=4)[0] >= 4
+    with pytest.raises(ValueError, match="positive"):
+        bucket_ladder(tiny, 0)
+    with pytest.raises(ValueError, match="exceeds"):
+        bucket_ladder(tiny, 4, min_bucket=8)
+
+
+def test_bucket_ladder_slack_does_not_compound(monkeypatch):
+    """Rungs are pruned against the next *kept* rung, never the adjacent
+    one: per-step ratios just under slack (1.12 vs 1.15) must not compound
+    into collapsing the ladder to the top rung."""
+    import math
+    import types
+
+    import repro.serve.conv as serve_mod
+
+    def fake_select(scene, model=None, **kw):
+        return types.SimpleNamespace(
+            predicted_s=1.12 ** math.log2(scene.B) if scene.B > 1 else 1.0)
+
+    monkeypatch.setattr(serve_mod, "select_schedule", fake_select)
+    sc = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3)
+    ladder = bucket_ladder(sc, 128, slack=1.15)
+    assert ladder == (2, 8, 32, 128)
+    # the documented invariant: every dropped rung pads to a kept rung
+    # within slack of its own predicted time
+    times = {b: fake_select(sc.with_batch(b)).predicted_s
+             for b in (1, 2, 4, 8, 16, 32, 64, 128)}
+    for b in times:
+        if b not in ladder:
+            nxt = next(k for k in ladder if k >= b)
+            assert times[nxt] <= 1.15 * times[b]
+
+
+# -- registry: warm / ladder / stats / thread-safety -------------------------
+def test_registry_warm_builds_ladder_without_traffic_stats():
+    reg = PlanRegistry()
+    sc = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    buckets = (1, 2, 4)
+    built = reg.warm([sc], ops=(ConvOp.FPROP, ConvOp.DGRAD), buckets=buckets)
+    assert built == 6 and len(reg) == 6
+    s = reg.stats()
+    assert (s["hits"], s["misses"]) == (0, 0), \
+        "warming is deliberate, not traffic"
+    # idempotent: nothing left to build
+    assert reg.warm([sc], ops=(ConvOp.FPROP, ConvOp.DGRAD),
+                    buckets=buckets) == 0
+    # every (bucket x op) is a registry hit now
+    for b in buckets:
+        for op in (ConvOp.FPROP, ConvOp.DGRAD):
+            assert reg.get(sc.with_batch(b), op) is not None
+    assert reg.stats()["hit_rate"] == 1.0
+
+
+def test_registry_warm_capacity_and_touch():
+    """A warm that cannot fit raises up front (a strict server must never
+    pass prewarm and then miss its first request), and warming touches
+    already-present plans so eviction falls on unrelated entries first."""
+    base = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                     padH=1, padW=1)
+    small = PlanRegistry(max_plans=2)
+    with pytest.raises(ValueError, match="cannot warm 3 plans"):
+        small.warm([base], buckets=(1, 2, 4))
+    assert len(small) == 0, "an oversized warm builds nothing"
+    # re-warming protects the warmed set: the unrelated plan is the LRU
+    reg = PlanRegistry(max_plans=3)
+    reg.warm([base], buckets=(1, 2))
+    other = ConvScene(B=1, IC=3, OC=3, inH=5, inW=5, fltH=3, fltW=3)
+    reg.get_or_build(other)               # unrelated entry, most recent
+    assert reg.warm([base], buckets=(1, 2)) == 0   # pure touch
+    reg.get_or_build(base.with_batch(4))  # overflow evicts exactly one
+    assert reg.get(other) is None, "eviction hit the unrelated entry"
+    assert reg.get(base.with_batch(1)) is not None
+    assert reg.get(base.with_batch(2)) is not None
+
+
+def test_registry_stats_hit_rate():
+    reg = PlanRegistry()
+    sc = ConvScene(B=2, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3)
+    assert reg.stats()["hit_rate"] == 0.0, "no lookups yet"
+    reg.get(sc)                       # miss
+    reg.get_or_build(sc)              # miss + build
+    reg.get_or_build(sc)              # hit
+    reg.get(sc)                       # hit
+    s = reg.stats()
+    assert (s["hits"], s["misses"]) == (2, 2)
+    assert s["hit_rate"] == pytest.approx(0.5)
+
+
+def test_registry_lru_order_under_bucket_ladder():
+    """Mixed get/put traffic over ladder plans: eviction follows recency of
+    *use*, not insertion, and stats track it."""
+    base = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                     padH=1, padW=1)
+    reg = PlanRegistry(max_plans=3)
+    reg.warm([base], buckets=(1, 2, 4))           # fills to capacity
+    assert len(reg) == 3 and reg.stats()["evictions"] == 0
+    reg.get(base.with_batch(1))                   # touch rung 1 -> MRU
+    reg.get_or_build(base.with_batch(8))          # new rung evicts rung 2
+    assert len(reg) == 3 and reg.stats()["evictions"] == 1
+    assert reg.get(base.with_batch(2)) is None, "rung 2 was LRU"
+    assert reg.get(base.with_batch(1)) is not None, "touched rung survived"
+    assert reg.get(base.with_batch(8)) is not None
+
+
+def test_registry_save_load_roundtrip_preserves_ladder(tmp_path,
+                                                       monkeypatch):
+    base = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                     padH=1, padW=1, stdH=2, stdW=2)
+    buckets = (1, 4, 8)
+    reg = PlanRegistry()
+    reg.warm([base], ops=(ConvOp.FPROP, ConvOp.DGRAD), buckets=buckets)
+    path = str(tmp_path / "ladder_plans.json")
+    reg.save(path)
+
+    calls = {"n": 0}
+    orig = build_mod.select_schedule
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(build_mod, "select_schedule", counting)
+    fresh = PlanRegistry()
+    assert fresh.load(path) == 6
+    assert calls["n"] == 0, "loading pinned ladder plans resolves nothing"
+    assert fresh.plans() == reg.plans()
+    for b in buckets:
+        assert fresh.get(base.with_batch(b)) is not None
+        assert fresh.get(base.with_batch(b), ConvOp.DGRAD) is not None
+
+
+def test_concurrent_get_or_build_is_atomic():
+    """Hammer one registry from many threads: no duplicate builds, no
+    corrupted LRU, no under-counted stats (the RLock contract)."""
+    reg = PlanRegistry()
+    scenes = [ConvScene(B=b, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3)
+              for b in (1, 2, 3, 4)]
+    per_thread, n_threads = 12, 8
+    results, errors = [[] for _ in range(n_threads)], []
+
+    def worker(i):
+        try:
+            for j in range(per_thread):
+                sc = scenes[(i + j) % len(scenes)]
+                results[i].append((sc.B, reg.get_or_build(sc)))
+        except Exception as e:  # noqa: BLE001 — surface any thread failure
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(reg) == len(scenes), "one plan per scene, never duplicates"
+    s = reg.stats()
+    assert s["hits"] + s["misses"] == per_thread * n_threads, \
+        "every lookup counted exactly once"
+    assert s["misses"] == len(scenes), "each scene missed exactly once"
+    by_key = {}
+    for chunk in results:
+        for b, plan in chunk:
+            assert by_key.setdefault(b, plan) is plan, \
+                "all threads share the same frozen plan object"
+
+
+# -- the server: parity, steady state, validation ----------------------------
+@pytest.fixture(scope="module")
+def six_net_layers():
+    return cnn_layer_scenes(ALL_NETS, **CAPS)
+
+
+def test_server_parity_mixed_burst_all_six_nets(six_net_layers):
+    """Coalesced micro-batched serving == per-request ConvPlan execution
+    (fp32 allclose) on a mixed burst across all six CNNs — including the
+    stride-4 remainder entry (alexnet/L0), 7x7/s2 stems, and pointwise
+    layers."""
+    layers = six_net_layers
+    # a remainder layer really is in the mix
+    assert any((sc.inH + 2 * sc.padH - sc.fltH) % sc.stdH
+               for sc in layers.values())
+    server = server_from_scenes(layers, max_batch=4, strict=True, seed=7)
+    server.prewarm()
+
+    reqs, rid = [], 0
+    for i, (layer, sc) in enumerate(sorted(layers.items())):
+        for b in (1, 1, 2):   # 4 images over 3 requests -> pad-free bucket,
+            reqs.append(ConvRequest(rid=rid, layer=layer,
+                                    x=_x(sc, b, seed=rid)))
+            rid += 1
+        if i % 3 == 0:        # ...except every third family: 5 images ->
+            reqs.append(ConvRequest(rid=rid, layer=layer,  # split + padding
+                                    x=_x(sc, 1, seed=rid)))
+            rid += 1
+    outs = server.serve(reqs)
+
+    for r, out in zip(reqs, outs):
+        assert r.done and out is r.out
+        fam = server._layers[r.layer]
+        want = make_plan(fam.base.with_batch(r.x.shape[3]),
+                         ConvOp.FPROP).execute(r.x, fam.flt)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+    s = server.stats()
+    assert s["requests"] == len(reqs)
+    assert s["plan_misses"] == 0 and s["plan_builds"] == 0
+    assert s["pad_waste_pct"] > 0, "the burst exercised bucket padding"
+    assert s["mean_batch"] > 1, "the burst exercised coalescing"
+
+
+def test_prewarmed_server_100_burst_zero_misses_zero_resolutions(
+        monkeypatch):
+    """The steady-state contract, asserted two ways: the registry counts
+    zero misses, and the schedule selector is hard-disabled after prewarm
+    (any resolution would raise, not just count)."""
+    layers = cnn_layer_scenes(("alexnet", "resnet"), max_hw=8, max_ch=8,
+                              layers_per_net=1)
+    records = []
+    server = server_from_scenes(layers, max_batch=8, strict=True,
+                                on_dispatch=records.append)
+    server.prewarm()
+
+    def forbidden(*a, **kw):
+        raise AssertionError("steady-state serving resolved a schedule")
+
+    monkeypatch.setattr(build_mod, "select_schedule", forbidden)
+    names = list(layers)
+    reqs = [ConvRequest(rid=i, layer=names[i % len(names)],
+                        x=_x(layers[names[i % len(names)]], 1, seed=i))
+            for i in range(100)]
+    outs = server.serve(reqs)
+    assert all(r.done for r in reqs) and len(outs) == 100
+    s = server.stats()
+    assert s["requests"] == 100
+    assert s["plan_misses"] == 0 and s["plan_builds"] == 0
+    assert s["registry"]["misses"] == 0, \
+        "prewarm + serve never missed the registry"
+    assert s["registry"]["hit_rate"] == 1.0
+    ladders = server.ladders()
+    assert sum(rec.occupied for rec in records) == 100
+    assert all(rec.bucket in ladders[rec.layer] for rec in records)
+    assert s["mean_batch"] >= 4, "the burst coalesced (occupancy >= 4)"
+
+
+def test_server_dgrad_requests_batch_along_b():
+    """DGRAD is batchable along B too (d_in is linear in d_out); a strided
+    layer's dgrad dispatches through the dilated Pallas scene."""
+    sc = ConvScene(B=1, IC=4, OC=6, inH=8, inW=8, fltH=3, fltW=3,
+                   padH=1, padW=1, stdH=2, stdW=2)
+    server = ConvServer(max_batch=4, strict=True)
+    flt = jax.random.normal(jax.random.PRNGKey(3), sc.flt_shape(),
+                            jnp.float32)
+    server.register_layer("s2", sc, flt, ops=(ConvOp.FPROP, ConvOp.DGRAD))
+    server.prewarm()
+    reqs = [ConvRequest(rid=i, layer="s2", op=ConvOp.DGRAD,
+                        x=jax.random.normal(jax.random.PRNGKey(10 + i),
+                                            (sc.outH, sc.outW, sc.OC, 1),
+                                            jnp.float32))
+            for i in range(3)]
+    server.serve(reqs)
+    dplan = make_plan(sc.with_batch(1), ConvOp.DGRAD)
+    assert not dplan.uses_reference
+    for r in reqs:
+        want = dplan.execute(r.x, flt)
+        np.testing.assert_allclose(np.asarray(r.out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+    assert server.stats()["dispatches"] == 1, "one coalesced dgrad dispatch"
+
+
+def test_server_squeezes_3d_requests():
+    sc = ConvScene(B=1, IC=3, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    server = ConvServer(max_batch=2)
+    flt = jnp.ones(sc.flt_shape(), jnp.float32)
+    server.register_layer("l", sc, flt)
+    req = server.submit(ConvRequest(rid=0, layer="l",
+                                    x=jnp.ones((6, 6, 3), jnp.float32)))
+    server.drain()
+    assert req.out.shape == (sc.outH, sc.outW, sc.OC), "3-D in, 3-D out"
+
+
+def test_server_validation_and_strictness():
+    sc = ConvScene(B=1, IC=3, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    flt = jnp.ones(sc.flt_shape(), jnp.float32)
+    server = ConvServer(max_batch=2, strict=True)
+    server.register_layer("l", sc, flt)
+    with pytest.raises(ValueError, match="wgrad contracts over"):
+        server.register_layer("w", sc, flt, ops=(ConvOp.WGRAD,))
+    with pytest.raises(ValueError, match="already registered"):
+        server.register_layer("l", sc, flt)
+    with pytest.raises(ValueError, match="does not match"):
+        server.register_layer("badw", sc, flt[:, :, :, :2])
+    with pytest.raises(KeyError, match="unknown layer"):
+        server.submit(ConvRequest(rid=0, layer="nope", x=jnp.ones((6, 6, 3))))
+    with pytest.raises(ValueError, match="serves ops"):
+        server.submit(ConvRequest(rid=0, layer="l", op=ConvOp.DGRAD,
+                                  x=jnp.ones((sc.outH, sc.outW, sc.OC, 1))))
+    with pytest.raises(ValueError, match="expects a"):
+        server.submit(ConvRequest(rid=0, layer="l",
+                                  x=jnp.ones((5, 6, 3, 1))))
+    with pytest.raises(ValueError, match="exceeds the top ladder bucket"):
+        server.submit(ConvRequest(rid=0, layer="l",
+                                  x=jnp.ones((6, 6, 3, 7))))
+    # strict mode: a post-warm miss is an error, not a silent rebuild
+    server.prewarm()
+    server.registry.clear()
+    server.submit(ConvRequest(rid=1, layer="l",
+                              x=jnp.ones((6, 6, 3, 1), jnp.float32)))
+    with pytest.raises(RuntimeError, match="post-warm plan miss"):
+        server.drain()
+    # non-strict: builds, serves, and counts the build
+    lax_server = ConvServer(max_batch=2, strict=False)
+    lax_server.register_layer("l", sc, flt)
+    lax_server.prewarm()
+    lax_server.registry.clear()
+    req = lax_server.submit(ConvRequest(rid=2, layer="l",
+                                        x=jnp.ones((6, 6, 3, 1),
+                                                   jnp.float32)))
+    lax_server.drain()
+    assert req.done
+    s = lax_server.stats()
+    assert s["plan_misses"] == 1 and s["plan_builds"] == 1
+
+
+def test_concurrent_submitters_one_server():
+    """Many client threads submitting while the serving thread drains:
+    every request completes with per-request parity."""
+    sc = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    flt = jax.random.normal(jax.random.PRNGKey(1), sc.flt_shape(),
+                            jnp.float32)
+    server = ConvServer(max_batch=4, strict=True)
+    server.register_layer("l", sc, flt)
+    server.prewarm()
+    reqs = [ConvRequest(rid=i, layer="l", x=_x(sc, 1, seed=i))
+            for i in range(24)]
+    errors = []
+
+    def client(chunk):
+        try:
+            for r in chunk:
+                server.submit(r)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(reqs[i::4],))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    server.drain()
+    plan = make_plan(sc.with_batch(1))
+    for r in reqs:
+        assert r.done
+        np.testing.assert_allclose(
+            np.asarray(r.out), np.asarray(plan.execute(r.x, flt)),
+            rtol=1e-4, atol=1e-4)
+    s = server.stats()
+    assert s["requests"] == 24 and s["plan_misses"] == 0
+
+
+def test_concurrent_serve_waits_for_own_requests():
+    """Two threads serve() overlapping bursts on one server: neither may
+    return None outputs just because the *other* thread's step() had
+    already popped its requests mid-drain (completion is per-request
+    signaling, not queue emptiness)."""
+    sc = ConvScene(B=1, IC=4, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    flt = jax.random.normal(jax.random.PRNGKey(2), sc.flt_shape(),
+                            jnp.float32)
+    server = ConvServer(max_batch=8, strict=True)
+    server.register_layer("l", sc, flt)
+    server.prewarm()
+    bursts = [[ConvRequest(rid=t * 100 + i, layer="l",
+                           x=_x(sc, 1, seed=t * 100 + i)) for i in range(9)]
+              for t in range(2)]
+    outs, errors = [None, None], []
+
+    def runner(t):
+        try:
+            outs[t] = server.serve(bursts[t])
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(t,)) for t in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    plan = make_plan(sc.with_batch(1))
+    for t in range(2):
+        assert outs[t] is not None and all(o is not None for o in outs[t])
+        for r, out in zip(bursts[t], outs[t]):
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(plan.execute(r.x, flt)),
+                rtol=1e-4, atol=1e-4)
+    assert server.stats()["requests"] == 18
+
+
+def test_requests_with_equal_fields_are_distinct_in_the_queue():
+    """ConvRequest is identity-compared (eq=False): two requests with the
+    same rid/layer/tensor must both be served, and coalescing must not
+    crash on jax-array __eq__ ambiguity."""
+    sc = ConvScene(B=1, IC=3, OC=4, inH=6, inW=6, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    flt = jnp.ones(sc.flt_shape(), jnp.float32)
+    server = ConvServer(max_batch=4)
+    server.register_layer("l", sc, flt)
+    x = jnp.ones((6, 6, 3, 1), jnp.float32)
+    twins = [ConvRequest(rid=0, layer="l", x=x) for _ in range(3)]
+    server.serve(twins)
+    assert all(t.done for t in twins)
+    assert server.stats()["requests"] == 3
