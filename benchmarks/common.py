@@ -60,3 +60,20 @@ def emit(rows: Iterable[tuple]) -> None:
     """CSV lines: name,us_per_call,derived."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def parse_derived(derived: str) -> dict:
+    """Split a ``k=v;k=v`` derived column into a dict for ``--json`` output.
+    Numeric values parse to floats (a trailing unit suffix like ``x``, ``%``
+    or ``req/dispatch`` keeps them strings — the raw string is preserved
+    alongside, so nothing is lost)."""
+    out = {}
+    for tok in str(derived).split(";"):
+        k, sep, v = tok.partition("=")
+        if not sep:
+            continue
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out

@@ -7,7 +7,7 @@ import os
 
 from benchmarks import (batch, calibration, channels, cnns, filters,
                         granularity, padstride, plans, serving, tuned)
-from benchmarks.common import emit
+from benchmarks.common import emit, parse_derived
 
 
 def roofline_rows():
@@ -38,6 +38,9 @@ def main() -> None:
     ap.add_argument("--plan", action="store_true",
                     help="also report plan-amortized dispatch overhead "
                          "(plan-once execute vs legacy per-call resolution)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one machine-readable JSON document instead "
+                         "of CSV (CI and dashboards consume this)")
     args = ap.parse_args()
     mods = {"channels": channels.rows, "batch": batch.rows,
             "filters": filters.rows, "padstride": padstride.rows,
@@ -51,6 +54,15 @@ def main() -> None:
         m for m in mods if m not in ("plans", "serving")]
     if args.plan and "plans" not in only:
         only.append("plans")
+    if args.json:
+        results = [{"table": name, "name": rname, "us_per_call": us,
+                    "derived": str(derived),
+                    "derived_fields": parse_derived(derived)}
+                   for name in only
+                   for rname, us, derived in mods[name]()]
+        print(json.dumps({"kind": "repro-bench", "schema": 1,
+                          "results": results}, indent=1))
+        return
     print("name,us_per_call,derived")
     for name in only:
         emit(mods[name]())

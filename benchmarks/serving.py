@@ -77,24 +77,16 @@ def rows(requests: int = 48, max_batch: int = 8):
         so the derived columns describe exactly the work that was clocked."""
         for i in range(0, len(warm_reqs), chunk):
             jax.block_until_ready(server.serve(warm_reqs[i:i + chunk]))
-        s0 = server.stats()
+        snap = server.snapshot()
         t0 = time.perf_counter()
         for i in range(0, len(reqs), chunk):
             jax.block_until_ready(server.serve(reqs[i:i + chunk]))
         us = (time.perf_counter() - t0) / len(reqs) * 1e6
-        s1 = server.stats()
-        lanes = s1["bucket_lanes"] - s0["bucket_lanes"]
-        occ = (s1["occupied_lanes"] - s0["occupied_lanes"]) / max(lanes, 1)
-        return us, {
-            "requests": s1["requests"] - s0["requests"],
-            "dispatches": s1["dispatches"] - s0["dispatches"],
-            "mean_batch": ((s1["requests"] - s0["requests"])
-                           / max(s1["dispatches"] - s0["dispatches"], 1)),
-            "occupancy": occ,
-            "pad_waste_pct": 100.0 * (1.0 - occ),
-            "plan_misses": s1["plan_misses"],
-            "hit_rate": s1["registry"]["hit_rate"],
-        }
+        # stats(since=snap) windows every counter to the timed section —
+        # the delta arithmetic now lives in repro.obs, not here
+        s = server.stats(since=snap)
+        s["hit_rate"] = s["registry"]["hit_rate"]
+        return us, s
 
     naive_us = time_naive(_burst(layers, requests, seed=2))
 
@@ -106,8 +98,8 @@ def rows(requests: int = 48, max_batch: int = 8):
         f"occupancy={s['mean_batch']:.1f}req/dispatch;"
         f"lane_occupancy={s['occupancy']:.2f};"
         f"pad_waste={s['pad_waste_pct']:.1f}%;"
-        f"dispatches={s['dispatches']};plans_built={built};"
-        f"plan_misses={s['plan_misses']};"
+        f"dispatches={s['dispatches']:.0f};plans_built={built};"
+        f"plan_misses={s['plan_misses']:.0f};"
         f"hit_rate={s['hit_rate']:.2f}")]
 
     trickle_us, s2 = time_server(_burst(layers, requests // 2, seed=4), 1,
@@ -116,7 +108,7 @@ def rows(requests: int = 48, max_batch: int = 8):
         "serving_trickle", trickle_us,
         f"naive={naive_us:.1f}us;speedup={naive_us / trickle_us:.2f}x;"
         f"occupancy={s2['mean_batch']:.1f}req/dispatch;"
-        f"plan_misses={s2['plan_misses']}"))
+        f"plan_misses={s2['plan_misses']:.0f}"))
     return out
 
 

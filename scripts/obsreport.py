@@ -1,0 +1,210 @@
+"""Render an observability artifact as a human (or machine) report.
+
+Reads either artifact the obs layer writes and prints what an operator asks
+of the serving/tuning stack first — latency quantiles, occupancy, padding
+waste, cost-model drift:
+
+  metrics dump   ``MetricRegistry.dump(path)`` JSON ({"kind": "repro-obs"}),
+                 optionally carrying a drift-monitor snapshot under "drift";
+  trace export   ``Tracer.export(path)`` Chrome trace-event JSON
+                 ({"traceEvents": [...]}) — per-span-name duration stats.
+
+Usage:
+
+    PYTHONPATH=src python scripts/obsreport.py metrics.json
+    PYTHONPATH=src python scripts/obsreport.py trace.json --json
+
+``--json`` emits the computed report as one JSON document instead of text
+(the same numbers, for CI assertions and dashboards).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.metrics import summarize_histogram      # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# metrics-dump report
+# --------------------------------------------------------------------------
+def _fmt_s(v: float) -> str:
+    """Seconds, scaled to a readable unit."""
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.2f}ms"
+    return f"{v * 1e6:.1f}us"
+
+
+def metrics_report(doc: Dict) -> Dict:
+    """Structured report from a ``repro-obs`` metrics dump."""
+    metrics = doc.get("metrics", {})
+    by_kind: Dict[str, Dict] = {"counter": {}, "gauge": {}, "histogram": {}}
+    for name, entry in sorted(metrics.items()):
+        kind = entry.get("type")
+        if kind == "histogram":
+            h = summarize_histogram(dict(entry))
+            by_kind["histogram"][name] = {
+                "count": h["count"], "mean": h["mean"], "p50": h["p50"],
+                "p90": h["p90"], "p99": h["p99"],
+                "min": h["min"], "max": h["max"]}
+        elif kind in by_kind:
+            by_kind[kind][name] = entry["value"]
+    report: Dict = {"kind": "metrics", "counters": by_kind["counter"],
+                    "gauges": by_kind["gauge"],
+                    "histograms": by_kind["histogram"]}
+
+    # serving derivations: the questions stats() answers, from raw counters
+    c = by_kind["counter"]
+    lanes = c.get("repro.serve.bucket_lanes", 0.0)
+    occupied = c.get("repro.serve.occupied_lanes", 0.0)
+    if lanes:
+        occ = occupied / lanes
+        report["serving"] = {
+            "requests": c.get("repro.serve.requests", 0.0),
+            "dispatches": c.get("repro.serve.dispatches", 0.0),
+            "occupancy": occ,
+            "pad_waste_pct": 100.0 * (1.0 - occ),
+            "hook_errors": c.get("repro.serve.dispatch_hook_errors", 0.0),
+        }
+
+    drift = doc.get("drift")
+    if drift:
+        classes = drift.get("classes", {})
+        report["drift"] = {
+            "threshold": drift.get("threshold"),
+            "classes": classes,
+            "flagged": sorted(cl for cl, s in classes.items()
+                              if s.get("flagged")),
+        }
+    return report
+
+
+def print_metrics_report(report: Dict) -> None:
+    if report["counters"]:
+        print("== counters ==")
+        for name, v in report["counters"].items():
+            print(f"  {name:<42} {v:.0f}")
+    if report["gauges"]:
+        print("== gauges ==")
+        for name, v in report["gauges"].items():
+            print(f"  {name:<42} {v:g}")
+    if report["histograms"]:
+        print("== histograms ==")
+        for name, h in report["histograms"].items():
+            unit = _fmt_s if name.endswith("_s") else lambda v: f"{v:.3g}"
+            print(f"  {name:<42} n={h['count']:<6.0f} "
+                  f"mean={unit(h['mean'])} p50={unit(h['p50'])} "
+                  f"p90={unit(h['p90'])} p99={unit(h['p99'])} "
+                  f"max={unit(h['max'])}")
+    if "serving" in report:
+        s = report["serving"]
+        print("== serving ==")
+        print(f"  requests={s['requests']:.0f} "
+              f"dispatches={s['dispatches']:.0f} "
+              f"occupancy={s['occupancy']:.3f} "
+              f"pad_waste={s['pad_waste_pct']:.1f}% "
+              f"hook_errors={s['hook_errors']:.0f}")
+    if "drift" in report:
+        d = report["drift"]
+        print(f"== drift (threshold={d['threshold']}) ==")
+        for cl, s in sorted(d["classes"].items()):
+            flag = "  << FLAGGED" if s.get("flagged") else ""
+            print(f"  {cl:<42} n={s['n']:<5} ewma_err={s['ewma_err']:.3f} "
+                  f"last_err={s['last_err']:.3f}{flag}")
+        if not d["classes"]:
+            print("  (no observations)")
+
+
+# --------------------------------------------------------------------------
+# trace-export report
+# --------------------------------------------------------------------------
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Exact nearest-rank percentile over raw per-span durations."""
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def trace_report(doc: Dict) -> Dict:
+    """Per-span-name duration stats from Chrome trace-event JSON."""
+    events = [e for e in doc.get("traceEvents", [])
+              if e.get("ph") == "X" and "dur" in e]
+    by_name: Dict[str, List[float]] = {}
+    span: Tuple[float, float] = (float("inf"), 0.0)
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e["dur"] * 1e-6)
+        span = (min(span[0], e["ts"]), max(span[1], e["ts"] + e["dur"]))
+    spans = {}
+    for name, durs in sorted(by_name.items()):
+        durs.sort()
+        spans[name] = {
+            "count": len(durs), "total_s": sum(durs),
+            "mean_s": sum(durs) / len(durs),
+            "p50_s": _percentile(durs, 0.5),
+            "p90_s": _percentile(durs, 0.9),
+            "p99_s": _percentile(durs, 0.99),
+            "max_s": durs[-1]}
+    return {"kind": "trace", "events": len(events),
+            "dropped_events": doc.get("otherData", {}).get(
+                "dropped_events", 0),
+            "wall_s": (span[1] - span[0]) * 1e-6 if events else 0.0,
+            "spans": spans}
+
+
+def print_trace_report(report: Dict) -> None:
+    print(f"== trace: {report['events']} spans over "
+          f"{_fmt_s(report['wall_s'])} "
+          f"(dropped={report['dropped_events']}) ==")
+    for name, s in report["spans"].items():
+        print(f"  {name:<34} n={s['count']:<6} total={_fmt_s(s['total_s'])} "
+              f"mean={_fmt_s(s['mean_s'])} p50={_fmt_s(s['p50_s'])} "
+              f"p90={_fmt_s(s['p90_s'])} p99={_fmt_s(s['p99_s'])} "
+              f"max={_fmt_s(s['max_s'])}")
+
+
+# --------------------------------------------------------------------------
+# entry
+# --------------------------------------------------------------------------
+def build_report(doc: Dict) -> Dict:
+    """Dispatch on artifact shape: metrics dump vs trace export."""
+    if doc.get("kind") == "repro-obs":
+        return metrics_report(doc)
+    if "traceEvents" in doc:
+        return trace_report(doc)
+    raise ValueError(
+        "unrecognized artifact: expected a MetricRegistry.dump() JSON "
+        "(kind='repro-obs') or a Tracer.export() trace (traceEvents)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="metrics dump or exported trace JSON")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of text")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        doc = json.load(f)
+    try:
+        report = build_report(doc)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    elif report["kind"] == "metrics":
+        print_metrics_report(report)
+    else:
+        print_trace_report(report)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

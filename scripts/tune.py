@@ -27,6 +27,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.mapping import select_schedule           # noqa: E402
 from repro.models.cnn import cnn_scenes                  # noqa: E402
 from repro.tune import ScheduleCache, autotune_scene     # noqa: E402
+from repro.tune.autotune import error_summary            # noqa: E402
 from repro.tune.cache import default_backend             # noqa: E402
 
 
@@ -100,9 +101,15 @@ def main(argv=None) -> int:
     path = cache.save()
     print(f"# wrote {len(cache)} entries -> {path}")
     if errors:
-        print(f"# prediction error: mean={sum(errors)/len(errors):.3f} "
-              f"max={max(errors):.3f}; analytic disagreed on "
-              f"{disagreements}/{tuned_total} scenes")
+        # error_summary excludes non-finite rows (all-timed-out tunes score
+        # prediction_error=inf) from mean/max and counts them instead
+        es = error_summary(errors)
+        print(f"# prediction error: mean={es['mean']:.3f} "
+              f"max={es['max']:.3f} over {es['n_finite']}/{es['n']} scenes"
+              + (f" ({es['n_nonfinite']} unmeasurable, excluded)"
+                 if es["n_nonfinite"] else "")
+              + f"; analytic disagreed on {disagreements}/{tuned_total} "
+              f"scenes")
         print(f"# next: fit the cost model from these records -> "
               f"scripts/calibrate.py --cache {path}")
     return 0

@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
+import time
 from typing import Optional, Tuple, Union
 
 import jax
@@ -54,6 +55,8 @@ from repro.core.mapping import ScheduleChoice, select_schedule
 from repro.core.scene import ConvScene, round_up
 from repro.kernels import mg3m_conv as kernels
 from repro.kernels import ref
+from repro.obs.metrics import default_metrics
+from repro.obs.trace import default_tracer
 
 PolicySpec = Union[None, str, ScheduleChoice]
 
@@ -109,13 +112,19 @@ def resolve_policy(scene: ConvScene, policy: PolicySpec,
     """
     if isinstance(policy, ScheduleChoice):
         return policy
-    if policy in ("auto", "tuned"):
-        from repro.tune.autotune import resolve_schedule  # avoids cycle
-        return resolve_schedule(scene, interpret=interpret)
-    if policy in (None, "analytic"):
-        return select_schedule(scene, model=_active_cost_model())
-    return select_schedule(scene, allowed=(policy,),
-                           model=_active_cost_model())
+    m = default_metrics()
+    m.counter("repro.plan.resolutions").inc()
+    t0 = time.perf_counter()
+    try:
+        if policy in ("auto", "tuned"):
+            from repro.tune.autotune import resolve_schedule  # avoids cycle
+            return resolve_schedule(scene, interpret=interpret)
+        if policy in (None, "analytic"):
+            return select_schedule(scene, model=_active_cost_model())
+        return select_schedule(scene, allowed=(policy,),
+                               model=_active_cost_model())
+    finally:
+        m.histogram("repro.plan.resolve_s").observe(time.perf_counter() - t0)
 
 
 # --------------------------------------------------------------------------
@@ -430,6 +439,14 @@ def make_plan(scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
     """
     op = ConvOp(op)
     tag = policy_tag(policy)
+    with default_tracer().span("repro.plan.make_plan", op=op.value,
+                               policy=tag, scene=scene.describe()):
+        return _make_plan_inner(scene, op, policy, tag, interpret, use_pallas)
+
+
+def _make_plan_inner(scene: ConvScene, op: ConvOp, policy: PolicySpec,
+                     tag: str, interpret: bool, use_pallas: bool) -> ConvPlan:
+    t_build = time.perf_counter()
     notes = []
     uses_reference = not use_pallas
     if not use_pallas:
@@ -467,6 +484,11 @@ def make_plan(scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
     if not uses_reference:
         choice = resolve_policy(exec_scene, policy, interpret)
         spec = derive_exec_spec(exec_scene, choice, out_hw)
+    m = default_metrics()
+    m.counter("repro.plan.builds").inc()
+    if uses_reference:
+        m.counter("repro.plan.reference_fallbacks").inc()
+    m.histogram("repro.plan.build_s").observe(time.perf_counter() - t_build)
     return ConvPlan(scene=scene, op=op, policy=tag,
                     interpret=interpret, use_pallas=use_pallas,
                     uses_reference=uses_reference, notes=tuple(notes),

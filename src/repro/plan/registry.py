@@ -18,11 +18,14 @@ import os
 import sys
 import tempfile
 import threading
+import time
 from typing import Dict, Iterable, Optional, Sequence, Union
 
 import jax.numpy as jnp
 
 from repro.core.scene import ConvScene
+from repro.obs.metrics import MetricRegistry, snapshot_delta, snapshot_value
+from repro.obs.trace import default_tracer
 from repro.plan.build import (ConvOp, ConvPlan, PolicySpec, assemble_plan,
                               make_plan, policy_tag)
 from repro.tune.cache import choice_from_dict, choice_to_dict
@@ -107,14 +110,34 @@ class PlanRegistry:
     remain lock-free merge-on-save, as documented on ``save``).
     """
 
-    def __init__(self, *, max_plans: int = 1024):
+    def __init__(self, *, max_plans: int = 1024,
+                 metrics: Optional[MetricRegistry] = None):
         self.max_plans = max_plans
         self._mem: "collections.OrderedDict[str, ConvPlan]" = \
             collections.OrderedDict()
         self._lock = threading.RLock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # Stats live in a MetricRegistry (own one by default, shareable via
+        # ``metrics=``): snapshot/delta/reset come from the obs layer
+        # instead of bespoke arithmetic; ``hits``/``misses``/``evictions``
+        # remain readable as attributes for existing callers.
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        self._c_hits = self.metrics.counter("repro.plan.registry.hits")
+        self._c_misses = self.metrics.counter("repro.plan.registry.misses")
+        self._c_evictions = self.metrics.counter(
+            "repro.plan.registry.evictions")
+        self._c_builds = self.metrics.counter("repro.plan.registry.builds")
+
+    @property
+    def hits(self) -> int:
+        return int(self._c_hits.value)
+
+    @property
+    def misses(self) -> int:
+        return int(self._c_misses.value)
+
+    @property
+    def evictions(self) -> int:
+        return int(self._c_evictions.value)
 
     def __len__(self) -> int:
         with self._lock:
@@ -138,10 +161,10 @@ class PlanRegistry:
         with self._lock:
             plan = self._mem.get(k)
             if plan is None:
-                self.misses += 1
+                self._c_misses.inc()
                 return None
             self._mem.move_to_end(k)
-            self.hits += 1
+            self._c_hits.inc()
             return plan
 
     def put(self, plan: ConvPlan) -> str:
@@ -170,6 +193,7 @@ class PlanRegistry:
             if plan is None:
                 plan = make_plan(scene, op, policy=policy, interpret=interpret,
                                  use_pallas=use_pallas)
+                self._c_builds.inc()
                 self.put(plan)
             return plan
 
@@ -215,6 +239,7 @@ class PlanRegistry:
                     self._mem[k] = make_plan(
                         rebatched, op, policy=policy, interpret=interpret,
                         use_pallas=use_pallas)
+                    self._c_builds.inc()
                     built += 1
                 self._mem.move_to_end(k)
             self._evict()
@@ -224,18 +249,35 @@ class PlanRegistry:
         # callers hold self._lock (all public entry points do)
         while len(self._mem) > self.max_plans:
             self._mem.popitem(last=False)  # least-recently used
-            self.evictions += 1
+            self._c_evictions.inc()
 
     def clear(self) -> None:
         with self._lock:
             self._mem.clear()
 
-    def stats(self) -> Dict[str, float]:
-        with self._lock:
-            lookups = self.hits + self.misses
-            return {"size": len(self._mem), "hits": self.hits,
-                    "misses": self.misses, "evictions": self.evictions,
-                    "hit_rate": self.hits / lookups if lookups else 0.0}
+    def snapshot(self) -> Dict[str, Dict]:
+        """Point-in-time metrics snapshot — pass back as ``stats(since=...)``
+        to read a *window* instead of lifetime aggregates."""
+        return self.metrics.snapshot()
+
+    def reset_stats(self) -> None:
+        """Zero hit/miss/eviction/build counters (plans stay resident)."""
+        self.metrics.reset()
+
+    def stats(self, since: Optional[Dict] = None) -> Dict[str, float]:
+        """Counter view; with ``since`` (a prior ``snapshot()``) every
+        counter and the hit rate describe only the window since then —
+        no manual before/after arithmetic at call sites."""
+        snap = self.metrics.snapshot()
+        if since is not None:
+            snap = snapshot_delta(since, snap)
+        v = lambda name: int(snapshot_value(snap,
+                                            f"repro.plan.registry.{name}"))
+        hits, misses = v("hits"), v("misses")
+        lookups = hits + misses
+        return {"size": len(self), "hits": hits, "misses": misses,
+                "evictions": v("evictions"), "builds": v("builds"),
+                "hit_rate": hits / lookups if lookups else 0.0}
 
     def plans(self) -> Dict[str, ConvPlan]:
         """Snapshot of signature -> plan."""
@@ -256,8 +298,13 @@ class PlanRegistry:
         writer added in between (last rename wins); the merge closes the
         common sequential-clobber case, it is not a locking guarantee."""
         p = os.path.abspath(os.path.expanduser(path))
-        with self._lock:
-            return self._save_locked(p)
+        t0 = time.perf_counter()
+        with default_tracer().span("repro.plan.registry.save", path=p):
+            with self._lock:
+                out = self._save_locked(p)
+        self.metrics.histogram("repro.plan.registry.save_s").observe(
+            time.perf_counter() - t0)
+        return out
 
     def _save_locked(self, p: str) -> str:
         plans = {k: plan_to_dict(pl) for k, pl in self._mem.items()}
@@ -291,21 +338,25 @@ class PlanRegistry:
         Malformed or stale entries are skipped with a warning, never fatal —
         a hand-edited artifact must not brick a serving warm-start."""
         p = os.path.abspath(os.path.expanduser(path))
-        with open(p) as f:
-            doc = json.load(f)
+        t0 = time.perf_counter()
         loaded = 0
         skipped = []
-        with self._lock:
-            for k, d in doc.get("plans", {}).items():
-                try:
-                    plan = plan_from_dict(d)
-                except (KeyError, TypeError, ValueError) as e:
-                    skipped.append((k, e))
-                    continue
-                self._mem[k] = plan
-                self._mem.move_to_end(k)
-                loaded += 1
-            self._evict()
+        with default_tracer().span("repro.plan.registry.load", path=p):
+            with open(p) as f:
+                doc = json.load(f)
+            with self._lock:
+                for k, d in doc.get("plans", {}).items():
+                    try:
+                        plan = plan_from_dict(d)
+                    except (KeyError, TypeError, ValueError) as e:
+                        skipped.append((k, e))
+                        continue
+                    self._mem[k] = plan
+                    self._mem.move_to_end(k)
+                    loaded += 1
+                self._evict()
+        self.metrics.histogram("repro.plan.registry.load_s").observe(
+            time.perf_counter() - t0)
         if skipped:
             print(f"repro.plan: skipped {len(skipped)} malformed plan "
                   f"entr{'y' if len(skipped) == 1 else 'ies'} in {p} "

@@ -29,6 +29,15 @@ for FPROP/DGRAD (both are linear in the batched operand), sliced off before
 the request completes, so coalesced output matches per-request execution.
 WGRAD *contracts over* B — batching requests along B would sum their
 gradients — so the server refuses it; use ``ConvPlan`` directly.
+
+Observability: every server owns a ``MetricRegistry`` (``repro.serve.*``
+counters + queue-wait/dispatch histograms; ``stats(since=snapshot())``
+windows them) and dispatches under a ``repro.serve.dispatch`` span when the
+tracer is enabled — ``DispatchRecord`` emission is a *subscriber of the span
+stream*, so anything ``on_dispatch`` sees is definitionally in the exported
+trace; with tracing off, records are published directly and the hot path
+pays one branch.  A hook that raises is counted
+(``repro.serve.dispatch_hook_errors``) and never fails the dispatch.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ import dataclasses
 import itertools
 import os
 import threading
+import time
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -45,6 +55,11 @@ import jax.numpy as jnp
 from repro.core.mapping import (CostModel, predicted_efficiency,
                                 select_schedule)
 from repro.core.scene import ConvScene
+from repro.obs import drift as drift_mod
+from repro.obs.metrics import (DEFAULT_RATIO_BUCKETS, MetricRegistry,
+                               snapshot_delta, snapshot_value)
+from repro.obs.trace import _NOOP as _NOOP_SPAN
+from repro.obs.trace import Span, Tracer, default_tracer
 from repro.plan import ConvOp, ConvPlan, PlanRegistry, make_plan
 from repro.plan.build import PolicySpec, _active_cost_model
 
@@ -124,11 +139,13 @@ class ConvRequest:
     out: Optional[jax.Array] = None
     done: bool = False
     error: Optional[BaseException] = None
-    # internal: batch width, whether to squeeze the result (3-D input), and
-    # the completion signal serve() waits on (set by whichever thread's
-    # step() dispatches the batch containing this request)
+    # internal: batch width, whether to squeeze the result (3-D input),
+    # submission timestamp (queue-wait metric), and the completion signal
+    # serve() waits on (set by whichever thread's step() dispatches the
+    # batch containing this request)
     _b: int = dataclasses.field(default=0, repr=False)
     _squeeze: bool = dataclasses.field(default=False, repr=False)
+    _t_submit: float = dataclasses.field(default=0.0, repr=False)
     _event: Optional[threading.Event] = dataclasses.field(default=None,
                                                           repr=False)
 
@@ -166,6 +183,9 @@ class _Family:
 # --------------------------------------------------------------------------
 # the server
 # --------------------------------------------------------------------------
+_SERVER_SEQ = itertools.count()   # unique per-process ids for span filtering
+
+
 class ConvServer:
     """Scene-bucketed micro-batching conv server over a prewarmed
     ``PlanRegistry``.
@@ -189,7 +209,9 @@ class ConvServer:
                  min_bucket: int = 1, ladder_slack: float = 1.15,
                  cost_model: Optional[CostModel] = None, strict: bool = False,
                  on_dispatch: Optional[Callable[[DispatchRecord], None]]
-                 = None):
+                 = None, metrics: Optional[MetricRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 drift: Optional["drift_mod.DriftMonitor"] = None):
         self.registry = registry if registry is not None else PlanRegistry()
         self.policy = policy
         self.interpret = interpret
@@ -205,13 +227,31 @@ class ConvServer:
         self._queue: "collections.deque[ConvRequest]" = collections.deque()
         self._seq = itertools.count()
         self._warmed = False
-        # serving counters (post-warm steady state)
-        self._requests_served = 0
-        self._dispatches = 0
-        self._occupied_lanes = 0
-        self._bucket_lanes = 0
-        self._plan_misses = 0
-        self._plan_builds = 0
+        # serving metrics (post-warm steady state); per-instance registry so
+        # two servers in one process never mix counters — pass ``metrics``
+        # to aggregate several servers into one registry instead
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        self.tracer = tracer if tracer is not None else default_tracer()
+        self.drift = drift if drift is not None else drift_mod.default_monitor()
+        self._c_requests = self.metrics.counter("repro.serve.requests")
+        self._c_dispatches = self.metrics.counter("repro.serve.dispatches")
+        self._c_occupied = self.metrics.counter("repro.serve.occupied_lanes")
+        self._c_bucket = self.metrics.counter("repro.serve.bucket_lanes")
+        self._c_plan_misses = self.metrics.counter("repro.serve.plan_misses")
+        self._c_plan_builds = self.metrics.counter("repro.serve.plan_builds")
+        self._c_hook_errors = self.metrics.counter(
+            "repro.serve.dispatch_hook_errors")
+        self._g_queue = self.metrics.gauge("repro.serve.queue_depth")
+        self._h_wait = self.metrics.histogram("repro.serve.queue_wait_s")
+        self._h_dispatch = self.metrics.histogram("repro.serve.dispatch_s")
+        self._h_occupancy = self.metrics.histogram(
+            "repro.serve.occupancy", bounds=DEFAULT_RATIO_BUCKETS)
+        # DispatchRecord emission rides the span stream when tracing is on:
+        # the sink below filters this server's finished dispatch spans, so
+        # the audit hook and the exported trace can never disagree.  The id
+        # is a process-unique sequence number (id() could be reused).
+        self._sid = next(_SERVER_SEQ)
+        self.tracer.subscribe(self._span_sink)
 
     # -- setup -------------------------------------------------------------
     def register_layer(self, layer: str, scene: ConvScene, flt: jax.Array,
@@ -314,8 +354,10 @@ class ConvServer:
         req._b = x.shape[3]
         req.out, req.done, req.error = None, False, None
         req._event = threading.Event()
+        req._t_submit = time.perf_counter()
         with self._lock:
             self._queue.append(req)
+            self._g_queue.set(len(self._queue))
         return req
 
     # -- dispatch ----------------------------------------------------------
@@ -335,6 +377,7 @@ class ConvServer:
                     self._queue.remove(r)
                     group.append(r)
                     total += r._b
+            self._g_queue.set(len(self._queue))
             return group
 
     def _plan(self, fam: _Family, op: ConvOp, bucket: int) -> ConvPlan:
@@ -342,8 +385,7 @@ class ConvServer:
                                  policy=self.policy, interpret=self.interpret,
                                  use_pallas=self.use_pallas)
         if plan is None:
-            with self._lock:
-                self._plan_misses += 1
+            self._c_plan_misses.inc()
             if self.strict:
                 raise RuntimeError(
                     f"post-warm plan miss: layer {fam.layer!r} {op.value} "
@@ -355,53 +397,109 @@ class ConvServer:
                              policy=self.policy, interpret=self.interpret,
                              use_pallas=self.use_pallas)
             self.registry.put(plan)
-            with self._lock:
-                self._plan_builds += 1
+            self._c_plan_builds.inc()
         return plan
 
     def step(self) -> int:
         """Coalesce and dispatch one micro-batch; returns requests served
-        (0 = queue empty)."""
+        (0 = queue empty).
+
+        With tracing enabled the dispatch runs under a
+        ``repro.serve.dispatch`` span, blocks on the result (honest
+        wall-clock), and streams the plan's (predicted, measured) pair into
+        the drift monitor; the finished span's args carry everything a
+        ``DispatchRecord`` holds and the span sink publishes it.  With
+        tracing disabled the dispatch stays async (the histograms then time
+        *enqueue*, not completion) and the record is published directly —
+        no span object is ever allocated on that path."""
+        enabled = self.tracer.enabled
         group = self._take_batch()
         if not group:
             return 0
-        try:
-            fam = self._layers[group[0].layer]
-            op = group[0].op
-            total = sum(r._b for r in group)
-            bucket = next(b for b in fam.ladder if b >= total)
-            x = (group[0].x if len(group) == 1
-                 else jnp.concatenate([r.x for r in group], axis=3))
-            if bucket > total:
-                x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, bucket - total)))
-            plan = self._plan(fam, op, bucket)
-            out = plan.execute(x, fam.flt)
-        except BaseException as e:
-            # the group is already off the queue: complete it with the
-            # error so a serve() waiting in another thread unblocks
+        t_start = time.perf_counter()
+        for r in group:
+            if r._t_submit:
+                self._h_wait.observe(t_start - r._t_submit)
+        sp = (self.tracer.span("repro.serve.dispatch", server=self._sid)
+              if enabled else _NOOP_SPAN)
+        with sp:
+            try:
+                fam = self._layers[group[0].layer]
+                op = group[0].op
+                total = sum(r._b for r in group)
+                bucket = next(b for b in fam.ladder if b >= total)
+                x = (group[0].x if len(group) == 1
+                     else jnp.concatenate([r.x for r in group], axis=3))
+                if bucket > total:
+                    x = jnp.pad(x,
+                                ((0, 0), (0, 0), (0, 0), (0, bucket - total)))
+                plan = self._plan(fam, op, bucket)
+                t_exec = time.perf_counter()
+                out = plan.execute(x, fam.flt)
+                if enabled:
+                    jax.block_until_ready(out)
+            except BaseException as e:
+                # the group is already off the queue: complete it with the
+                # error so a serve() waiting in another thread unblocks
+                for r in group:
+                    r.error, r.done = e, True
+                    if r._event is not None:
+                        r._event.set()
+                raise
+            exec_s = time.perf_counter() - t_exec
+            off = 0
             for r in group:
-                r.error, r.done = e, True
+                sl = out[..., off:off + r._b]
+                off += r._b
+                r.out = sl[..., 0] if r._squeeze else sl
+                r.done = True
                 if r._event is not None:
                     r._event.set()
-            raise
-        off = 0
-        for r in group:
-            sl = out[..., off:off + r._b]
-            off += r._b
-            r.out = sl[..., 0] if r._squeeze else sl
-            r.done = True
-            if r._event is not None:
-                r._event.set()
-        with self._lock:
-            self._requests_served += len(group)
-            self._dispatches += 1
-            self._occupied_lanes += total
-            self._bucket_lanes += bucket
-        if self.on_dispatch is not None:
-            self.on_dispatch(DispatchRecord(
+            self._c_requests.inc(len(group))
+            self._c_dispatches.inc()
+            self._c_occupied.inc(total)
+            self._c_bucket.inc(bucket)
+            self._h_dispatch.observe(time.perf_counter() - t_start)
+            self._h_occupancy.observe(total / bucket)
+            if (enabled and plan.choice is not None
+                    and plan.exec_scene is not None):
+                # blocked above, so exec_s is an honest kernel wall-clock:
+                # audit the cost model with it
+                self.drift.observe(
+                    drift_mod.scene_class(plan.exec_scene, plan.choice),
+                    plan.choice.predicted_s, exec_s)
+            # args only on success: a failed dispatch leaves the span with
+            # its error tag and never becomes a DispatchRecord
+            sp.set(layer=fam.layer, op=op.value, bucket=bucket,
+                   occupied=total, requests=len(group),
+                   schedule=plan.schedule, exec_s=exec_s)
+        if not enabled:
+            self._publish(DispatchRecord(
                 layer=fam.layer, op=op, bucket=bucket, occupied=total,
                 requests=len(group), schedule=plan.schedule))
         return len(group)
+
+    def _span_sink(self, span: Span) -> None:
+        """Span-stream subscriber: this server's finished dispatch spans
+        become ``DispatchRecord``s (tracing-enabled path)."""
+        a = span.args
+        if (span.name != "repro.serve.dispatch"
+                or a.get("server") != self._sid or "layer" not in a):
+            return
+        self._publish(DispatchRecord(
+            layer=a["layer"], op=ConvOp(a["op"]), bucket=a["bucket"],
+            occupied=a["occupied"], requests=a["requests"],
+            schedule=a.get("schedule")))
+
+    def _publish(self, rec: DispatchRecord) -> None:
+        """Deliver one record to ``on_dispatch``; a raising hook is counted
+        and swallowed — an audit sink must never take serving down."""
+        if self.on_dispatch is None:
+            return
+        try:
+            self.on_dispatch(rec)
+        except Exception:  # noqa: BLE001 — hook bug != dispatch failure
+            self._c_hook_errors.inc()
 
     def drain(self) -> int:
         """Serve until the queue is empty; returns requests served."""
@@ -437,31 +535,50 @@ class ConvServer:
         with self._lock:
             return {name: fam.ladder for name, fam in self._layers.items()}
 
-    def stats(self) -> Dict[str, float]:
+    def snapshot(self) -> Dict[str, Dict]:
+        """Point-in-time metric snapshot (server + registry; their metric
+        names never collide) — feed it back as ``stats(since=...)`` for a
+        windowed view, or persist it via ``MetricRegistry.dump``."""
+        snap = dict(self.metrics.snapshot())
+        snap.update(self.registry.snapshot())
+        return snap
+
+    def reset_stats(self) -> None:
+        """Zero the serving and registry metrics (registrations kept)."""
+        self.metrics.reset()
+        self.registry.reset_stats()
+
+    def stats(self, since: Optional[Dict] = None) -> Dict[str, float]:
         """Serving counters + the registry's.  ``occupancy`` is real lanes /
         padded lanes over all dispatches (1.0 = no pad waste);
         ``pad_waste_pct`` is its complement; ``plan_misses`` must stay 0 on
-        a prewarmed server."""
+        a prewarmed server.  ``since`` (an earlier ``snapshot()``) windows
+        every counter-derived field to the interval since it — this replaces
+        the manual before/after arithmetic callers used to do.  ``queued``
+        is instantaneous either way."""
+        snap = self.snapshot()
+        if since is not None:
+            snap = snapshot_delta(since, snap)
+        v = lambda name: int(snapshot_value(snap, f"repro.serve.{name}"))
+        requests, dispatches = v("requests"), v("dispatches")
+        occupied, bucket = v("occupied_lanes"), v("bucket_lanes")
+        occ = occupied / bucket if bucket else 0.0
         with self._lock:
-            occ = (self._occupied_lanes / self._bucket_lanes
-                   if self._bucket_lanes else 0.0)
-            return {
-                "requests": self._requests_served,
-                "dispatches": self._dispatches,
-                "mean_batch": (self._requests_served / self._dispatches
-                               if self._dispatches else 0.0),
-                "occupancy": occ,
-                "pad_waste_pct": 100.0 * (1.0 - occ) if self._bucket_lanes
-                                 else 0.0,
-                # raw lane counters, so callers can window stats (delta of
-                # two snapshots) instead of reading lifetime aggregates
-                "occupied_lanes": self._occupied_lanes,
-                "bucket_lanes": self._bucket_lanes,
-                "plan_misses": self._plan_misses,
-                "plan_builds": self._plan_builds,
-                "queued": len(self._queue),
-                "registry": self.registry.stats(),
-            }
+            queued = len(self._queue)
+        return {
+            "requests": requests,
+            "dispatches": dispatches,
+            "mean_batch": requests / dispatches if dispatches else 0.0,
+            "occupancy": occ,
+            "pad_waste_pct": 100.0 * (1.0 - occ) if bucket else 0.0,
+            "occupied_lanes": occupied,
+            "bucket_lanes": bucket,
+            "plan_misses": v("plan_misses"),
+            "plan_builds": v("plan_builds"),
+            "dispatch_hook_errors": v("dispatch_hook_errors"),
+            "queued": queued,
+            "registry": self.registry.stats(since=since),
+        }
 
     def describe(self) -> str:
         """One line per family: ladder and per-rung predicted efficiency."""

@@ -23,11 +23,31 @@ from typing import Callable, Dict, List, Optional
 from repro.core import mapping
 from repro.core.mapping import ScheduleChoice, select_schedule
 from repro.core.scene import ConvScene
+from repro.obs import drift as drift_mod
+from repro.obs.metrics import default_metrics
+from repro.obs.trace import default_tracer
 from repro.tune import cache as cache_mod
 from repro.tune import measure as measure_mod
 from repro.tune import space as space_mod
 
 MeasureFn = Callable[[ConvScene, ScheduleChoice], float]
+
+
+def error_summary(errors: List[float]) -> Dict[str, float]:
+    """Aggregate prediction errors with non-finite rows excluded and counted.
+
+    A ``prediction_error=inf`` row (an all-candidates-timed-out tune) would
+    poison ``mean``/``max`` into ``inf`` — report it as a *count* instead,
+    so the audit trail distinguishes "the model is 30% off" from "two scenes
+    never produced a timing"."""
+    finite = [e for e in errors if math.isfinite(e)]
+    return {
+        "n": len(errors),
+        "n_finite": len(finite),
+        "n_nonfinite": len(errors) - len(finite),
+        "mean": sum(finite) / len(finite) if finite else float("nan"),
+        "max": max(finite) if finite else float("nan"),
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +135,14 @@ def autotune_scene(scene: ConvScene, *,
     distinct: Dict = {}
     for c in candidates:
         distinct.setdefault(clip(c), c)
-    timings = [(measure_fn(msc, c), c) for c in distinct.values()]
+    with default_tracer().span("repro.tune.scene", scene=scene.describe(),
+                               backend=backend,
+                               n_candidates=len(distinct)):
+        timings = [(measure_fn(msc, c), c) for c in distinct.values()]
     best_us, best = min(timings, key=lambda t: t[0])
+    default_metrics().counter("repro.tune.scenes_tuned").inc()
     if not math.isfinite(best_us):
+        default_metrics().counter("repro.tune.tune_failures").inc()
         # Every candidate failed to produce a timing: fall back to the
         # analytic choice and do NOT cache — a poisoned entry would pin the
         # schedule="auto" path to a known-broken kernel.
@@ -140,6 +165,12 @@ def autotune_scene(scene: ConvScene, *,
 
     predicted_us = _predicted_us(msc, best)
     err = abs(best_us - predicted_us) / best_us if best_us > 0 else float("inf")
+    # Every tuning run doubles as a drift observation: the winner's
+    # (predicted, measured) pair streams into the per-scene-class monitor
+    # (non-finite pairs are dropped and counted there, never averaged).
+    drift_mod.default_monitor().observe(
+        drift_mod.scene_class(msc, best),
+        predicted_us * 1e-6, best_us * 1e-6)
     tuned = TunedChoice(
         choice=best, measured_us=best_us,
         analytic_schedule=analytic.schedule,

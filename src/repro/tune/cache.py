@@ -21,6 +21,7 @@ import json
 import os
 import sys
 import tempfile
+import time
 from typing import Dict, Optional
 
 import jax
@@ -28,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.mapping import SCHEDULES, ScheduleChoice
 from repro.core.scene import ConvScene
+from repro.obs.metrics import default_metrics
+from repro.obs.trace import default_tracer
 
 # Bump when kernels / the measurement harness change meaning of cached µs.
 CODE_VERSION = "mg3m-tune-v1"
@@ -196,9 +199,11 @@ class ScheduleCache:
         rec = self._mem.get(k)
         if rec is None:
             self.misses += 1
+            default_metrics().counter("repro.tune.cache.misses").inc()
             return None
         self._mem.move_to_end(k)
         self.hits += 1
+        default_metrics().counter("repro.tune.cache.hits").inc()
         return rec
 
     def get_choice(self, scene: ConvScene, backend: Optional[str] = None
@@ -222,8 +227,14 @@ class ScheduleCache:
     def load(self, path: Optional[str] = None) -> int:
         """Merge entries from a JSON artifact into memory; returns count."""
         p = resolve_cache_path(path) if path else self.path
-        with open(p) as f:
+        m = default_metrics()
+        m.counter("repro.tune.cache.loads").inc()
+        t0 = time.perf_counter()
+        with default_tracer().span("repro.tune.cache.load", path=p), \
+                open(p) as f:
             doc = json.load(f)
+        m.histogram("repro.tune.cache.load_s").observe(
+            time.perf_counter() - t0)
         entries = doc.get("entries", {})
         bad = {k for k, rec in entries.items() if not valid_record(rec)}
         if bad:
@@ -247,30 +258,38 @@ class ScheduleCache:
         The union happens in the artifact only — disk entries beyond the
         LRU bound are preserved on disk without inflating memory."""
         p = resolve_cache_path(path) if path else self.path
-        entries = dict(self._mem)
-        if os.path.exists(p):
+        m = default_metrics()
+        m.counter("repro.tune.cache.saves").inc()
+        t0 = time.perf_counter()
+        with default_tracer().span("repro.tune.cache.save", path=p):
+            entries = dict(self._mem)
+            if os.path.exists(p):
+                try:
+                    with open(p) as f:
+                        doc = json.load(f)
+                    disk = (doc.get("entries", {})
+                            if isinstance(doc, dict) else {})
+                    for k, rec in (disk
+                                   if isinstance(disk, dict) else {}).items():
+                        if not valid_record(rec):
+                            continue   # drop malformed disk entries on save
+                        if k not in entries or _beats(rec, entries[k]):
+                            entries[k] = rec
+                except (json.JSONDecodeError, OSError):
+                    pass  # corrupt artifact: overwrite with our state
+            os.makedirs(os.path.dirname(p), exist_ok=True)
+            doc = {"schema": _SCHEMA, "version": CODE_VERSION,
+                   "entries": entries}
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p), suffix=".tmp")
             try:
-                with open(p) as f:
-                    doc = json.load(f)
-                disk = doc.get("entries", {}) if isinstance(doc, dict) else {}
-                for k, rec in (disk if isinstance(disk, dict) else {}).items():
-                    if not valid_record(rec):
-                        continue   # drop malformed disk entries on save
-                    if k not in entries or _beats(rec, entries[k]):
-                        entries[k] = rec
-            except (json.JSONDecodeError, OSError):
-                pass  # corrupt artifact: overwrite with our state
-        os.makedirs(os.path.dirname(p), exist_ok=True)
-        doc = {"schema": _SCHEMA, "version": CODE_VERSION,
-               "entries": entries}
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p), suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(doc, f, indent=1, sort_keys=True)
-            os.replace(tmp, p)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+                with os.fdopen(fd, "w") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, p)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        m.histogram("repro.tune.cache.save_s").observe(
+            time.perf_counter() - t0)
         return p
 
 

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 
 from repro.core.mapping import ScheduleChoice
 from repro.core.scene import ConvScene, ceil_div
+from repro.obs.metrics import default_metrics
+from repro.obs.trace import default_tracer
 
 # A candidate that cannot produce one timed call inside this budget is scored
 # at whatever it cost so far — bad-but-finite beats hanging the whole tune.
@@ -80,23 +82,37 @@ def measure_choice(scene: ConvScene, choice: ScheduleChoice, *,
     """
     from repro.kernels import ops  # local: keeps tune importable sans kernels
 
+    m = default_metrics()
+    m.counter("repro.tune.measurements").inc()
     inp, flt = make_operands(scene)
-    t0 = time.perf_counter()
-    try:
-        fn = lambda: ops.mg3m_conv_op(inp, flt, scene, schedule=choice,
-                                      interpret=interpret)
-        for _ in range(max(warmup, 1)):
-            jax.block_until_ready(fn())
-            if time.perf_counter() - t0 > timeout_s:
-                return math.inf  # budget exhausted before any timed iteration
-        times = []
-        for _ in range(max(iters, 1)):
-            t1 = time.perf_counter()
-            jax.block_until_ready(fn())
-            times.append(time.perf_counter() - t1)
-            if time.perf_counter() - t0 > timeout_s:
-                break
-        times.sort()
-        return times[len(times) // 2] * 1e6
-    except Exception:  # noqa: BLE001 — any kernel failure = infeasible point
-        return math.inf
+    with default_tracer().span("repro.tune.measure",
+                               schedule=choice.schedule, bm=choice.bm,
+                               bn=choice.bn, bk=choice.bk,
+                               scene=scene.describe()) as sp:
+        t0 = time.perf_counter()
+        try:
+            fn = lambda: ops.mg3m_conv_op(inp, flt, scene, schedule=choice,
+                                          interpret=interpret)
+            for _ in range(max(warmup, 1)):
+                jax.block_until_ready(fn())
+                if time.perf_counter() - t0 > timeout_s:
+                    # budget exhausted before any timed iteration
+                    m.counter("repro.tune.measure_timeouts").inc()
+                    sp.set(outcome="timeout")
+                    return math.inf
+            times = []
+            for _ in range(max(iters, 1)):
+                t1 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times.append(time.perf_counter() - t1)
+                if time.perf_counter() - t0 > timeout_s:
+                    break
+            times.sort()
+            us = times[len(times) // 2] * 1e6
+            m.histogram("repro.tune.measure_s").observe(us * 1e-6)
+            sp.set(outcome="ok", measured_us=us)
+            return us
+        except Exception:  # noqa: BLE001 — kernel failure = infeasible point
+            m.counter("repro.tune.measure_failures").inc()
+            sp.set(outcome="infeasible")
+            return math.inf

@@ -202,7 +202,7 @@ def test_registry_hit_miss_and_identity():
     p2 = reg.get_or_build(sc)
     assert p1 is p2, "a registry hit returns the same frozen plan"
     assert reg.stats() == {"size": 1, "hits": 1, "misses": 2, "evictions": 0,
-                           "hit_rate": 1 / 3}
+                           "builds": 1, "hit_rate": 1 / 3}
     # a different op / policy / dtype is a different plan
     reg.get_or_build(sc, ConvOp.DGRAD)
     reg.get_or_build(sc, policy="TB88")
