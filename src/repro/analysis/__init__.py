@@ -1,0 +1,45 @@
+"""Static analysis over the plan/schedule stack.
+
+Two layers:
+
+  * ``analysis.verify`` — proves properties of a (scene, schedule) pair or a
+    built ``ConvPlan`` with pure integer math, no kernel execution: output
+    coverage/disjointness, index-map bounds and sentinel resolution, VMEM
+    budget, dtype promotion, MAC/grid-step agreement with the cost model.
+  * ``analysis.lint`` — AST checks for codebase invariants (no ``assert`` on
+    public API paths, metric naming, hot-path allocation discipline, broad
+    exception hygiene).
+
+``analysis.footprint`` holds the single VMEM-footprint formula shared by
+selection, tuning, the kernels, and the verifier.
+
+This ``__init__`` stays lazy beyond ``footprint``: ``core.mapping`` imports
+the footprint at module level, and eagerly importing ``verify`` here (which
+imports ``core.mapping`` back) would make that a cycle.
+"""
+from __future__ import annotations
+
+from repro.analysis.footprint import vmem_bytes
+
+__all__ = [
+    "vmem_bytes",
+    # lazy (see __getattr__): verify-layer API
+    "Finding", "verify_plan", "verify_choice", "verify_point",
+    "sweep_scene", "sweep_scenes",
+    # lazy: lint-layer API
+    "LintFinding", "lint_paths", "lint_source",
+]
+
+_VERIFY_NAMES = ("Finding", "verify_plan", "verify_choice", "verify_point",
+                 "sweep_scene", "sweep_scenes")
+_LINT_NAMES = ("LintFinding", "lint_paths", "lint_source")
+
+
+def __getattr__(name: str):
+    if name in _VERIFY_NAMES:
+        from repro.analysis import verify
+        return getattr(verify, name)
+    if name in _LINT_NAMES:
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

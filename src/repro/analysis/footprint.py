@@ -1,0 +1,59 @@
+"""The one VMEM-footprint formula of the stack.
+
+Every consumer of "does this blocking fit on-chip memory" answers it here:
+
+  * ``core/mapping._score`` rejects over-budget candidates during selection;
+  * ``tune/space.enumerate_space`` filters the autotuner's search space;
+  * ``kernels/mg3m_conv`` refuses to launch an over-budget blocking;
+  * ``analysis/verify`` re-checks every built plan statically.
+
+Before this module the arithmetic lived in ``core/mapping`` and the kernels
+trusted selection to have done it — a drifted copy (or a caller bypassing
+selection) could launch a blocking whose working set Mosaic cannot
+double-buffer.  Keeping the formula here, importable from everywhere
+(this module depends only on ``core.scene``), makes the agreement
+structural instead of conventional.
+
+The model per schedule (see ``core/mapping`` for the schedule semantics):
+
+  TB11  whole FLT + one (K, N) input window + one (M, N) output tile;
+  TB18  an OC-slice of FLT (bm wide) + the same window + (bm, N) output;
+  TB88  classic (bm x bk) x (bk x bn) GEMM tiles.
+
+Streamed operands are double-buffered (x2, the paper's Alg. 3 analogue —
+Mosaic overlaps the next block's DMA with compute), plus a persistent fp32
+accumulator tile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.scene import ConvScene
+
+__all__ = ["vmem_bytes"]
+
+
+def vmem_bytes(scene: ConvScene, schedule: str, bm: int, bn: int,
+               bk: int) -> int:
+    """VMEM working-set bytes of one grid step of ``schedule`` at blocking
+    ``(bm, bn, bk)`` over ``scene`` — double-buffered operands + fp32
+    accumulator.  Pure integer arithmetic; raises ``ValueError`` on an
+    unknown schedule."""
+    it = jnp.dtype(scene.dtype).itemsize
+    acc = 4 * bm * bn  # fp32 accumulator scratch
+    if schedule == "TB11":
+        flt_blk = scene.fltH * scene.fltW * scene.K * scene.M * it
+        in_blk = scene.K * scene.N * it
+        out_blk = scene.M * scene.N * it
+    elif schedule == "TB18":
+        flt_blk = scene.fltH * scene.fltW * scene.K * bm * it
+        in_blk = scene.K * scene.N * it
+        out_blk = bm * scene.N * it
+    elif schedule == "TB88":
+        flt_blk = bk * bm * it
+        in_blk = bk * bn * it
+        out_blk = bm * bn * it
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    # x2: Mosaic double-buffers streamed operands (paper Alg. 3).
+    return 2 * (flt_blk + in_blk + out_blk) + acc

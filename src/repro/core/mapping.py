@@ -34,6 +34,7 @@ from typing import Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.analysis.footprint import vmem_bytes as _vmem_bytes
 from repro.core.scene import ConvScene, ceil_div, round_up
 
 # TPU v5e model constants (per chip).  bf16 MXU rate; fp32 runs at half.
@@ -212,23 +213,9 @@ def _traffic_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -
     return tasks * (n_n * flt_per_task + n_m * in_win) + out
 
 
-def _vmem_bytes(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int) -> int:
-    it = _dtype_bytes(scene.dtype)
-    acc = 4 * bm * bn  # fp32 accumulator scratch
-    if schedule == "TB11":
-        flt_blk = scene.fltH * scene.fltW * scene.K * scene.M * it
-        in_blk = scene.K * scene.N * it
-        out_blk = scene.M * scene.N * it
-    elif schedule == "TB18":
-        flt_blk = scene.fltH * scene.fltW * scene.K * bm * it
-        in_blk = scene.K * scene.N * it
-        out_blk = bm * scene.N * it
-    else:
-        flt_blk = bk * bm * it
-        in_blk = bk * bn * it
-        out_blk = bm * bn * it
-    # x2: Mosaic double-buffers streamed operands (paper Alg. 3).
-    return 2 * (flt_blk + in_blk + out_blk) + acc
+# The VMEM working-set arithmetic lives in repro.analysis.footprint (one
+# formula shared with the tuner's space filter, the kernels' feasibility
+# check, and the static verifier); _vmem_bytes above is that function.
 
 
 def _score(scene: ConvScene, schedule: str, bm: int, bn: int, bk: int,

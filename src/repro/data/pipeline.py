@@ -22,7 +22,9 @@ class SyntheticLM:
 
     def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
                  host_id: int = 0, n_hosts: int = 1):
-        assert batch % n_hosts == 0
+        if batch % n_hosts != 0:
+            raise ValueError(
+                f"batch {batch} not divisible by n_hosts {n_hosts}")
         self.vocab, self.batch, self.seq = vocab, batch, seq
         self.seed, self.host_id, self.n_hosts = seed, host_id, n_hosts
 

@@ -39,8 +39,13 @@ def causal_conv1d(x: jax.Array, w: jax.Array, *, block_l: int,
                   block_d: int, interpret: bool = False) -> jax.Array:
     b, l, d = x.shape
     kw = w.shape[0]
-    assert l % block_l == 0 and d % block_d == 0
-    assert kw <= block_l, "filter longer than an L block"
+    if l % block_l != 0 or d % block_d != 0:
+        raise ValueError(
+            f"(L={l}, D={d}) not divisible by blocks "
+            f"(block_l={block_l}, block_d={block_d})")
+    if kw > block_l:
+        raise ValueError(f"filter width {kw} longer than an L block "
+                         f"{block_l}")
     grid = (b, l // block_l, d // block_d)
     kernel = functools.partial(_kernel, kw=kw, block_l=block_l)
     return pl.pallas_call(

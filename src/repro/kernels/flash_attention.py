@@ -79,11 +79,14 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """q: (BH, S, D); k, v: (BHkv, T, D); BH % BHkv == 0."""
     bh, s, d = q.shape
     bhkv, t, _ = k.shape
-    assert bh % bhkv == 0, (bh, bhkv)
+    if bh % bhkv != 0:
+        raise ValueError(f"BH {bh} not a multiple of BHkv {bhkv}")
     g = bh // bhkv
     bq = min(block_q, s)
     bk = min(block_k, t)
-    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    if s % bq != 0 or t % bk != 0:
+        raise ValueError(f"(S={s}, T={t}) not divisible by blocks "
+                         f"(bq={bq}, bk={bk})")
     nq, nk = s // bq, t // bk
     grid = (bh, nq, nk)
     kernel = functools.partial(

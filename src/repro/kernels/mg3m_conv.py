@@ -12,6 +12,14 @@ core/mapping.py for the selection model):
   TB88: grid (outH, outW, n_m, n_n, fltH, fltW, n_k); classic 2D+K tiled
         GEMM per output pixel.
 
+Each launch is described first as a ``KernelGridSpec`` — grid extents,
+block shapes, index maps, dimension semantics — built by
+``kernel_grid_spec`` and consumed by ``pl.pallas_call``.  The spec is the
+single source of truth for the launch geometry: ``repro.analysis.verify``
+walks the *same* spec with pure integer math to prove coverage, bounds,
+and sentinel resolution statically, so what the verifier checks is what
+the kernel runs, not a parallel reimplementation.
+
 Input layout depends on the scene's lhs dilation (see ``_in_index_map``):
 
   dilH == dilW == 1   a *spatially pre-padded* input [inHp, inWp, K, N]
@@ -35,17 +43,22 @@ paper's DPD kernels), cast to the IO dtype on the final store.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.footprint import vmem_bytes
 from repro.kernels.pallas_compat import TPUCompilerParams
 
+from repro.core.mapping import VMEM_BUDGET
 from repro.core.scene import ConvScene, ceil_div
+
+Shape4 = Tuple[int, int, int, int]
 
 
 def _in_index_map(scene: ConvScene):
@@ -74,6 +87,167 @@ def _in_index_map(scene: ConvScene):
                 jnp.where(ok, qw // scene.dilW, scene.inW))
 
     return at
+
+
+# --------------------------------------------------------------------------
+# launch geometry — one declarative spec per schedule
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KernelGridSpec:
+    """Declarative Pallas launch geometry for one schedule over one scene.
+
+    Everything ``pl.pallas_call`` needs — grid extents, operand/output
+    block shapes, index maps, dimension semantics, accumulator scratch —
+    plus the structural facts the static verifier reasons over:
+    ``reduction_dims`` (grid axes that revisit the same output block and
+    must not move it) and ``reduction_extents`` (the sizes the kernel body
+    compares ``program_id`` against to detect the first/last reduction
+    step).  The index maps take grid coordinates in grid order and return
+    *block* indices (Pallas convention: element offset = index * block)."""
+
+    schedule: str
+    scene: ConvScene
+    grid: Tuple[int, ...]
+    in_shape: Shape4            # operand shapes exactly as launched
+    flt_shape: Shape4
+    out_shape: Shape4
+    in_block: Shape4
+    flt_block: Shape4
+    out_block: Shape4
+    in_index: Callable[..., Tuple]
+    flt_index: Callable[..., Tuple]
+    out_index: Callable[..., Tuple]
+    dimension_semantics: Tuple[str, ...]
+    reduction_dims: Tuple[int, ...]
+    reduction_extents: Tuple[int, ...]
+    spatial_dims: Tuple[int, int]   # grid axes carrying (oh, ow)
+    tap_dims: Tuple[int, int]       # grid axes carrying the (i, j) filter tap
+    acc_shape: Tuple[int, int]
+    acc_dtype: Any = jnp.float32
+
+    @property
+    def blocks(self) -> Tuple[int, int, int]:
+        """(bm, bn, bk) as the footprint/cost model counts them."""
+        bm = self.out_block[2]
+        bn = self.out_block[3]
+        bk = self.in_block[2]
+        return bm, bn, bk
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def kernel_grid_spec(scene: ConvScene, schedule: str, *, in_shape: Shape4,
+                     flt_shape: Shape4, bm: int = 0, bn: int = 0,
+                     bk: int = 0,
+                     vmem_budget: int = 0) -> KernelGridSpec:
+    """Build the launch geometry for ``schedule`` over ``scene`` given the
+    operand shapes exactly as they will be passed to the kernel (spatially
+    pre-padded or sentinel-extended input, channel/batch-aligned dims — see
+    ``plan/build._conv_body``).
+
+    Validates divisibility of the launched dims by the blocking and, when
+    ``vmem_budget`` > 0, that the blocking's working set fits it (the same
+    ``analysis.footprint`` arithmetic selection and tuning filter with) —
+    raising ``ValueError`` instead of launching a kernel Mosaic cannot
+    double-buffer."""
+    fh, fw, k, m = flt_shape
+    n = in_shape[-1]
+    _require(in_shape[2] == k,
+             f"input K dim {in_shape[2]} != filter K dim {k} for "
+             f"{scene.describe()}")
+    at = _in_index_map(scene)
+    oh_ow = (scene.outH, scene.outW)
+
+    if schedule == "TB11":
+        spec = KernelGridSpec(
+            schedule="TB11", scene=scene,
+            grid=(*oh_ow, fh, fw),
+            in_shape=in_shape, flt_shape=flt_shape,
+            out_shape=(*oh_ow, m, n),
+            in_block=(1, 1, k, n), flt_block=(fh, fw, k, m),
+            out_block=(1, 1, m, n),
+            in_index=lambda oh, ow, i, j: (*at(oh, ow, i, j), 0, 0),
+            flt_index=lambda oh, ow, i, j: (0, 0, 0, 0),
+            out_index=lambda oh, ow, i, j: (oh, ow, 0, 0),
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary"),
+            reduction_dims=(2, 3), reduction_extents=(fh, fw),
+            spatial_dims=(0, 1), tap_dims=(2, 3),
+            acc_shape=(m, n))
+    elif schedule == "TB18":
+        _require(bm > 0 and m % bm == 0,
+                 f"TB18 OC slice bm={bm} must divide the launched OC dim "
+                 f"{m} for {scene.describe()}")
+        spec = KernelGridSpec(
+            schedule="TB18", scene=scene,
+            grid=(m // bm, *oh_ow, fh, fw),
+            in_shape=in_shape, flt_shape=flt_shape,
+            out_shape=(*oh_ow, m, n),
+            in_block=(1, 1, k, n), flt_block=(fh, fw, k, bm),
+            out_block=(1, 1, bm, n),
+            in_index=lambda mm, oh, ow, i, j: (*at(oh, ow, i, j), 0, 0),
+            flt_index=lambda mm, oh, ow, i, j: (0, 0, 0, mm),
+            out_index=lambda mm, oh, ow, i, j: (oh, ow, mm, 0),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary"),
+            reduction_dims=(3, 4), reduction_extents=(fh, fw),
+            spatial_dims=(1, 2), tap_dims=(3, 4),
+            acc_shape=(bm, n))
+    elif schedule == "TB88":
+        _require(bm > 0 and bn > 0 and bk > 0
+                 and m % bm == 0 and n % bn == 0 and k % bk == 0,
+                 f"TB88 blocking ({bm}/{bn}/{bk}) must divide the launched "
+                 f"(M={m}, N={n}, K={k}) dims for {scene.describe()}")
+        nk = k // bk
+        spec = KernelGridSpec(
+            schedule="TB88", scene=scene,
+            grid=(*oh_ow, m // bm, n // bn, fh, fw, nk),
+            in_shape=in_shape, flt_shape=flt_shape,
+            out_shape=(*oh_ow, m, n),
+            in_block=(1, 1, bk, bn), flt_block=(1, 1, bk, bm),
+            out_block=(1, 1, bm, bn),
+            in_index=lambda oh, ow, mm, nn, i, j, kk: (
+                *at(oh, ow, i, j), kk, nn),
+            flt_index=lambda oh, ow, mm, nn, i, j, kk: (i, j, kk, mm),
+            out_index=lambda oh, ow, mm, nn, i, j, kk: (oh, ow, mm, nn),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary", "arbitrary",
+                                 "arbitrary"),
+            reduction_dims=(4, 5, 6), reduction_extents=(fh, fw, nk),
+            spatial_dims=(0, 1), tap_dims=(4, 5),
+            acc_shape=(bm, bn))
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    if vmem_budget > 0:
+        need = vmem_bytes(scene, schedule, *spec.blocks)
+        _require(need <= vmem_budget,
+                 f"{schedule} blocking {spec.blocks} needs {need} B of VMEM "
+                 f"(budget {vmem_budget} B) for {scene.describe()}")
+    return spec
+
+
+def _launch(spec: KernelGridSpec, kernel, inp: jax.Array, flt: jax.Array, *,
+            interpret: bool) -> jax.Array:
+    """One ``pl.pallas_call`` from a ``KernelGridSpec`` — the only place
+    the three schedules turn geometry into a launch."""
+    return pl.pallas_call(
+        kernel,
+        grid=spec.grid,
+        in_specs=[
+            pl.BlockSpec(spec.in_block, spec.in_index),
+            pl.BlockSpec(spec.flt_block, spec.flt_index),
+        ],
+        out_specs=pl.BlockSpec(spec.out_block, spec.out_index),
+        out_shape=jax.ShapeDtypeStruct(spec.out_shape, inp.dtype),
+        scratch_shapes=[pltpu.VMEM(spec.acc_shape, spec.acc_dtype)],
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=spec.dimension_semantics),
+        interpret=interpret,
+    )(inp, flt)
 
 
 def _dot_kt(flt_blk: jax.Array, in_blk: jax.Array) -> jax.Array:
@@ -115,26 +289,11 @@ def conv_tb11(inp: jax.Array, flt: jax.Array, scene: ConvScene, *,
               interpret: bool = False) -> jax.Array:
     """inp pre-padded (or compact+sentinel when lhs-dilated, see module doc);
     returns [outH, outW, M, N]."""
-    fh, fw, k, m = flt.shape
-    n = inp.shape[-1]
-    at = _in_index_map(scene)
-    grid = (scene.outH, scene.outW, fh, fw)
-    kernel = functools.partial(_tb11_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, k, n),
-                         lambda oh, ow, i, j: (*at(oh, ow, i, j), 0, 0)),
-            pl.BlockSpec((fh, fw, k, m), lambda oh, ow, i, j: (0, 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, m, n), lambda oh, ow, i, j: (oh, ow, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
-        scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
-        compiler_params=TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(inp, flt)
+    spec = kernel_grid_spec(scene, "TB11", in_shape=inp.shape,
+                            flt_shape=flt.shape, vmem_budget=VMEM_BUDGET)
+    kernel = functools.partial(_tb11_kernel, flt_hw=spec.reduction_extents,
+                               out_dtype=inp.dtype)
+    return _launch(spec, kernel, inp, flt, interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -160,29 +319,12 @@ def _tb18_kernel(in_ref, flt_ref, out_ref, acc_ref, *, flt_hw: Tuple[int, int],
 
 def conv_tb18(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
               interpret: bool = False) -> jax.Array:
-    fh, fw, k, m = flt.shape
-    n = inp.shape[-1]
-    assert m % bm == 0, (m, bm)
-    at = _in_index_map(scene)
-    grid = (m // bm, scene.outH, scene.outW, fh, fw)
-    kernel = functools.partial(_tb18_kernel, flt_hw=(fh, fw), out_dtype=inp.dtype)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, k, n),
-                         lambda mm, oh, ow, i, j: (*at(oh, ow, i, j), 0, 0)),
-            pl.BlockSpec((fh, fw, k, bm), lambda mm, oh, ow, i, j: (0, 0, 0, mm)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bm, n),
-                               lambda mm, oh, ow, i, j: (oh, ow, mm, 0)),
-        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(inp, flt)
+    spec = kernel_grid_spec(scene, "TB18", in_shape=inp.shape,
+                            flt_shape=flt.shape, bm=bm,
+                            vmem_budget=VMEM_BUDGET)
+    kernel = functools.partial(_tb18_kernel, flt_hw=spec.reduction_extents,
+                               out_dtype=inp.dtype)
+    return _launch(spec, kernel, inp, flt, interpret=interpret)
 
 
 # --------------------------------------------------------------------------
@@ -209,30 +351,9 @@ def _tb88_kernel(in_ref, flt_ref, out_ref, acc_ref, *, red_dims, out_dtype):
 
 def conv_tb88(inp: jax.Array, flt: jax.Array, scene: ConvScene, *, bm: int,
               bn: int, bk: int, interpret: bool = False) -> jax.Array:
-    fh, fw, k, m = flt.shape
-    n = inp.shape[-1]
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, bm, n, bn, k, bk)
-    nk = k // bk
-    at = _in_index_map(scene)
-    grid = (scene.outH, scene.outW, m // bm, n // bn, fh, fw, nk)
-    kernel = functools.partial(_tb88_kernel, red_dims=(fh, fw, nk),
+    spec = kernel_grid_spec(scene, "TB88", in_shape=inp.shape,
+                            flt_shape=flt.shape, bm=bm, bn=bn, bk=bk,
+                            vmem_budget=VMEM_BUDGET)
+    kernel = functools.partial(_tb88_kernel, red_dims=spec.reduction_extents,
                                out_dtype=inp.dtype)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bk, bn),
-                         lambda oh, ow, mm, nn, i, j, kk: (
-                             *at(oh, ow, i, j), kk, nn)),
-            pl.BlockSpec((1, 1, bk, bm),
-                         lambda oh, ow, mm, nn, i, j, kk: (i, j, kk, mm)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bm, bn),
-                               lambda oh, ow, mm, nn, i, j, kk: (oh, ow, mm, nn)),
-        out_shape=jax.ShapeDtypeStruct((scene.outH, scene.outW, m, n), inp.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "parallel",
-                                 "arbitrary", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(inp, flt)
+    return _launch(spec, kernel, inp, flt, interpret=interpret)

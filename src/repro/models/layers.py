@@ -189,7 +189,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     g = hq // hkv
     q_chunk = min(q_chunk, s) if q_chunk else s     # 0 = unchunked
     kv_chunk = min(kv_chunk, t) if kv_chunk else t
-    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, q_chunk, t, kv_chunk)
+    if s % q_chunk != 0 or t % kv_chunk != 0:
+        raise ValueError(f"(S={s}, T={t}) not divisible by chunks "
+                         f"(q_chunk={q_chunk}, kv_chunk={kv_chunk})")
     nq, nk = s // q_chunk, t // kv_chunk
     scale = d ** -0.5
     qg = q.reshape(b, nq, q_chunk, hkv, g, d)

@@ -68,7 +68,8 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a_head: jax.Array, b: jax.Array,
     """
     bs, l, h, p = x.shape
     g, s = b.shape[2], b.shape[3]
-    assert l % chunk == 0, (l, chunk)
+    if l % chunk != 0:
+        raise ValueError(f"L {l} not divisible by chunk {chunk}")
     nc = l // chunk
     hg = h // g
 

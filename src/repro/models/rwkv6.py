@@ -127,7 +127,8 @@ def rwkv6_timemix_chunked(p: Params, x: jax.Array, x_prev_tail: jax.Array,
     carries everything longer-range.
     """
     b, l, d = x.shape
-    assert l % chunk == 0, (l, chunk)
+    if l % chunk != 0:
+        raise ValueError(f"L {l} not divisible by chunk {chunk}")
     nc = l // chunk
     xs = _token_shift(x.astype(F32), x_prev_tail.astype(F32))
     r, k, v, g, w, logw = _project_rkvwg(p, x, xs)

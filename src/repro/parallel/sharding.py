@@ -115,7 +115,10 @@ def param_pspecs(cfg: ArchConfig, params: Any, mesh, tp: bool = True) -> Any:
             return P()
         ndim = len(leaf.shape)
         extra = ndim - len(base)
-        assert extra >= 0, (names, leaf.shape, base)
+        if extra < 0:
+            raise ValueError(
+                f"param {names} shape {leaf.shape} has fewer dims than "
+                f"its sharding rule {base}")
         full = (None,) * extra + tuple(_logical_to_mesh(a, mesh, tp)
                                        for a in base)
 

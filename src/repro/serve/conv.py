@@ -438,7 +438,8 @@ class ConvServer:
                 out = plan.execute(x, fam.flt)
                 if enabled:
                     jax.block_until_ready(out)
-            except BaseException as e:
+            except BaseException as e:  # noqa: BLE001 — propagated to every
+                # waiter in the group (r.error below), not swallowed
                 # the group is already off the queue: complete it with the
                 # error so a serve() waiting in another thread unblocks
                 for r in group:

@@ -37,7 +37,9 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int, max_len: int,
                  seed: int = 0):
-        assert cfg.embed_inputs, "serving engine drives token models"
+        if not cfg.embed_inputs:
+            raise ValueError("serving engine drives token models "
+                             "(cfg.embed_inputs must be set)")
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.cache = T.init_cache(cfg, slots, max_len)

@@ -250,7 +250,8 @@ def lower_serve_step(cfg: ArchConfig, shape_name: str, mesh,
                 lowered = jitted.lower(params_shape, batch_shape)
         return lowered
 
-    assert kind == "decode", kind
+    if kind != "decode":
+        raise ValueError(f"unknown serve step kind {kind!r}")
     fn, hooks = build_decode_step(cfg, mesh, plan)
     cache_shape = jax.eval_shape(
         functools.partial(T.init_cache, cfg, bsz, seq))

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+from repro.analysis.footprint import vmem_bytes
 from repro.core import mapping
 from repro.core.mapping import (LANE, SUBLANE, SCHEDULES, ScheduleChoice,
                                 VMEM_BUDGET)
@@ -83,7 +84,7 @@ def enumerate_space(scene: ConvScene,
     points = []
     for schedule in schedules:
         for bm, bn, bk in block_candidates(scene, schedule):
-            if mapping._vmem_bytes(scene, schedule, bm, bn, bk) <= vmem_budget:
+            if vmem_bytes(scene, schedule, bm, bn, bk) <= vmem_budget:
                 points.append(CandidatePoint(schedule, bm, bn, bk))
     return tuple(points)
 

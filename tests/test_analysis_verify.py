@@ -1,0 +1,238 @@
+"""Static plan/schedule verifier: clean-tree sweeps, seeded-bug mutation
+coverage (every bug class the verifier exists to catch, via
+``dataclasses.replace`` on a good ``KernelGridSpec``), and the
+single-source VMEM-footprint regression."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.mg3m_conv as mg
+from repro.analysis import footprint
+from repro.analysis.verify import (_spec_for, check_spec, sweep_scene,
+                                   sweep_scenes, verify_plan, verify_point)
+from repro.core import mapping
+from repro.core.mapping import ScheduleChoice
+from repro.core.scene import ConvScene
+from repro.models.cnn import cnn_layer_scenes
+from repro.plan import ConvOp, make_plan
+from repro.tune import space as tune_space
+
+DENSE = ConvScene(B=4, IC=8, OC=16, inH=8, inW=8, fltH=3, fltW=3,
+                  padH=1, padW=1)
+STRIDED = ConvScene(B=4, IC=8, OC=16, inH=10, inW=10, fltH=3, fltW=3,
+                    padH=1, padW=1, stdH=2, stdW=2)
+# the dgrad-shaped scene class: lhs-dilated + asymmetric pad -> sentinel route
+DILATED = ConvScene(B=2, IC=8, OC=16, inH=5, inW=5, fltH=3, fltW=3,
+                    padH=1, padW=1, dilH=2, dilW=2, apadH=1, apadW=1)
+
+
+def _spec(scene, schedule="TB11", bm=0, bn=0, bk=0):
+    choice = ScheduleChoice(schedule, bm or scene.M, bn or scene.N,
+                            bk or scene.K, 0.0, 0.0, 0.0, 0)
+    spec, bad = _spec_for(scene, choice)
+    assert bad is None, bad
+    return spec
+
+
+def _codes(findings):
+    return {f.code for f in findings}
+
+
+# --------------------------------------------------------------------------
+# clean tree: zero findings, no kernel execution
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("scene", [DENSE, STRIDED, DILATED],
+                         ids=["dense", "strided", "dilated"])
+@pytest.mark.parametrize("schedule", ["TB11", "TB18", "TB88"])
+def test_verify_point_clean(scene, schedule):
+    blocks = {} if schedule == "TB11" else dict(bm=8, bn=128, bk=8)
+    assert verify_point(scene, schedule, **blocks) == []
+
+
+@pytest.mark.parametrize("op", list(ConvOp))
+def test_verify_plan_clean_all_ops(op):
+    assert verify_plan(make_plan(STRIDED, op)) == []
+
+
+def test_sweep_scene_covers_all_ops_and_points():
+    findings, checked = sweep_scene(STRIDED)
+    assert findings == []
+    # at least one feasible point per op survives the VMEM filter
+    assert checked >= 3
+
+
+def test_sweep_paper_scenes_clean():
+    scenes = cnn_layer_scenes(batch=1, max_hw=14, max_ch=32)
+    findings, checked = sweep_scenes(scenes)
+    assert findings == {}
+    assert checked > 100
+
+
+def test_reference_plan_has_nothing_to_verify():
+    # over-padded 1x1 dgrad is blocked -> reference path: no Pallas geometry
+    sc = ConvScene(B=1, IC=2, OC=2, inH=6, inW=6, fltH=1, fltW=1,
+                   padH=1, padW=1)
+    plan = make_plan(sc, ConvOp.DGRAD)
+    assert plan.uses_reference and verify_plan(plan) == []
+
+
+# --------------------------------------------------------------------------
+# mutation coverage: each seeded bug class is flagged, actionably
+# --------------------------------------------------------------------------
+def test_mutation_shifted_output_tile():
+    spec = _spec(DENSE, "TB18", bm=8)
+    bad = dataclasses.replace(
+        spec, out_index=lambda mm, oh, ow, i, j: (oh, ow, mm + 1, 0))
+    codes = _codes(check_spec(bad))
+    assert "out-coverage" in codes
+
+
+def test_mutation_collapsed_output_tiles_overlap():
+    spec = _spec(DENSE, "TB11")
+    bad = dataclasses.replace(
+        spec, out_index=lambda oh, ow, i, j: (0, ow, 0, 0))
+    codes = _codes(check_spec(bad))
+    assert "out-overlap" in codes
+
+
+def test_mutation_output_moves_with_reduction():
+    spec = _spec(DENSE, "TB11")
+    bad = dataclasses.replace(
+        spec, out_index=lambda oh, ow, i, j: (oh, ow, i, 0))
+    codes = _codes(check_spec(bad))
+    assert "reduction-dependence" in codes
+
+
+def test_mutation_dropped_filter_tap():
+    spec = _spec(DENSE, "TB11")
+    g = spec.grid
+    bad = dataclasses.replace(spec, grid=(g[0], g[1], g[2] - 1, g[3]),
+                              reduction_extents=(g[2] - 1, g[3]))
+    codes = _codes(check_spec(bad))
+    assert "dropped-tap" in codes
+    assert "grid-steps-disagree" in codes
+
+
+def test_mutation_sentinel_miss_reads_dilation_hole():
+    spec = _spec(DILATED, "TB11")
+    sc = DILATED
+
+    def dense_style(oh, ow, i, j):  # pretends the input were pre-padded
+        return (np.minimum(oh * sc.stdH + i, sc.inH),
+                np.minimum(ow * sc.stdW + j, sc.inW), 0, 0)
+
+    codes = _codes(check_spec(dataclasses.replace(spec,
+                                                  in_index=dense_style)))
+    assert "sentinel-miss" in codes
+
+
+def test_mutation_live_taps_sent_to_sentinel():
+    spec = _spec(DILATED, "TB11")
+    bad = dataclasses.replace(
+        spec,
+        in_index=lambda oh, ow, i, j: (DILATED.inH, DILATED.inW, 0, 0))
+    findings = check_spec(bad)
+    assert "dropped-tap" in _codes(findings)
+    # the message carries everything needed to reproduce: scene + schedule
+    msg = next(f for f in findings if f.code == "dropped-tap").message
+    assert "TB11" in msg and "scene(" in msg
+
+
+def test_mutation_vmem_overshoot():
+    spec = _spec(DENSE, "TB11")
+    codes = _codes(check_spec(spec, vmem_budget=1024))
+    assert "vmem-overshoot" in codes
+
+
+def test_mutation_accumulator_demoted():
+    spec = _spec(DENSE, "TB11")
+    bad = dataclasses.replace(spec, acc_dtype=jnp.bfloat16)
+    codes = _codes(check_spec(bad))
+    assert "dtype-promotion" in codes
+
+
+def test_mutation_input_block_out_of_bounds():
+    spec = _spec(DENSE, "TB88", bm=8, bn=128, bk=8)
+    orig = spec.in_index
+
+    def shifted(*gc):
+        ih, iw, kk, nn = orig(*gc)
+        return ih, iw, kk + spec.grid[-1], nn  # one K-block past the end
+
+    codes = _codes(check_spec(dataclasses.replace(spec, in_index=shifted)))
+    assert "in-bounds" in codes
+
+
+def test_findings_name_scene_and_schedule():
+    spec = _spec(STRIDED, "TB18", bm=8)
+    bad = dataclasses.replace(
+        spec, out_index=lambda mm, oh, ow, i, j: (0, 0, 0, 0))
+    findings = check_spec(bad)
+    assert findings
+    for f in findings:
+        assert f.schedule == "TB18"
+        assert f.scene == STRIDED.describe()
+        assert f.message  # self-contained, non-empty
+
+
+# --------------------------------------------------------------------------
+# one footprint formula for the whole stack
+# --------------------------------------------------------------------------
+def test_single_footprint_source():
+    # selection, tuning-space filter, kernel guard, verifier: same function
+    assert mapping._vmem_bytes is footprint.vmem_bytes
+    assert tune_space.vmem_bytes is footprint.vmem_bytes
+    assert mg.vmem_bytes is footprint.vmem_bytes
+
+
+def test_footprint_pinned_bytes():
+    # K=8, N=4, M=16, 3x3 filter, fp32: hand-computed working sets
+    sc = ConvScene(B=4, IC=8, OC=16, inH=8, inW=8, fltH=3, fltW=3,
+                   padH=1, padW=1)
+    # TB11: 2*(4608 + 128 + 256) + 4*16*4
+    assert footprint.vmem_bytes(sc, "TB11", 16, 4, 8) == 10240
+    # TB18 bm=8: 2*(2304 + 128 + 128) + 4*8*4
+    assert footprint.vmem_bytes(sc, "TB18", 8, 4, 8) == 5248
+    # TB88 8/4/8: 2*(256 + 128 + 128) + 4*8*4
+    assert footprint.vmem_bytes(sc, "TB88", 8, 4, 8) == 1152
+    with pytest.raises(ValueError):
+        footprint.vmem_bytes(sc, "TB99", 8, 4, 8)
+
+
+def test_flagged_geometry_really_diverges():
+    # a geometry the verifier rejects computes a wrong answer when it does
+    # run — the flag is about real miscomputation, not style
+    import functools
+
+    import jax
+
+    from repro.kernels import ref
+
+    sc = ConvScene(B=4, IC=8, OC=16, inH=6, inW=6, fltH=3, fltW=3)  # pad=0
+    spec = mg.kernel_grid_spec(sc, "TB11", in_shape=sc.in_shape(),
+                               flt_shape=sc.flt_shape())
+    assert check_spec(spec) == []
+    bad = dataclasses.replace(
+        spec, out_index=lambda oh, ow, i, j: (0, ow, 0, 0))
+    assert any(f.code == "out-overlap" for f in check_spec(bad))
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    inp = jax.random.normal(k1, sc.in_shape(), jnp.float32)
+    flt = jax.random.normal(k2, sc.flt_shape(), jnp.float32)
+    kernel = functools.partial(mg._tb11_kernel,
+                               flt_hw=spec.reduction_extents,
+                               out_dtype=inp.dtype)
+    got = mg._launch(bad, kernel, inp, flt, interpret=True)
+    want = ref.conv_ref(inp, flt, sc)
+    assert not np.allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-4, atol=2e-4)
+
+
+def test_verifier_vmem_agrees_with_selection_filter():
+    # every point the tuner enumerates as feasible passes the verifier's
+    # budget check, and an over-budget point is rejected by both
+    for pt in tune_space.enumerate_space(STRIDED):
+        fnd = verify_point(STRIDED, pt.schedule, pt.bm, pt.bn, pt.bk)
+        assert not any(f.code == "vmem-overshoot" for f in fnd)
