@@ -6,7 +6,8 @@ import json
 import os
 
 from benchmarks import (batch, calibration, channels, cnns, filters,
-                        granularity, padstride, plans, serving, tuned)
+                        granularity, padstride, plans, serving, sharding,
+                        tuned)
 from benchmarks.common import emit, parse_derived
 
 
@@ -34,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
                          "padstride,cnns,granularity,roofline,tuned,"
-                         "calibration,plans,serving")
+                         "calibration,plans,serving,sharding")
     ap.add_argument("--plan", action="store_true",
                     help="also report plan-amortized dispatch overhead "
                          "(plan-once execute vs legacy per-call resolution)")
@@ -47,11 +48,12 @@ def main() -> None:
             "cnns": cnns.rows, "granularity": granularity.rows,
             "roofline": roofline_rows, "tuned": tuned.rows,
             "calibration": calibration.rows, "plans": plans.rows,
-            "serving": serving.rows}
-    # the plans and serving tables are opt-in (they JIT-warm whole plan
-    # ladders): --plan appends plans, --only plans/serving isolates them
+            "serving": serving.rows, "sharding": sharding.rows}
+    # the plans/serving/sharding tables are opt-in (they JIT-warm whole plan
+    # ladders or need a forced multi-device host): --plan appends plans,
+    # --only plans/serving/sharding isolates them
     only = args.only.split(",") if args.only else [
-        m for m in mods if m not in ("plans", "serving")]
+        m for m in mods if m not in ("plans", "serving", "sharding")]
     if args.plan and "plans" not in only:
         only.append("plans")
     if args.json:

@@ -1,0 +1,94 @@
+"""Mesh-sharded plan execution: weak-scaling smoke over the host device ring.
+
+Two sweeps, both adaptive to ``jax.device_count()`` (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise real
+shard_map rings; on a 1-device host only the n=1 rows emit):
+
+  * ``shard_weak_batch_n{n}`` — weak scaling on the batch partition: the
+    global batch grows with the shard count so per-shard work is constant;
+    ``eff`` is t(n=1)/t(n) (1.0 = perfect weak scaling).
+  * ``shard_halo_n{n}`` — strong slicing of one fixed scene across the
+    spatial-H axis with ``ppermute`` halo exchange; ``halo_bytes`` is the
+    modeled inter-shard traffic the joint selector charges.
+
+Honesty per ``benchmarks/common.py``: forced host "devices" share the same
+CPU cores, so wall-clock "scaling" here validates plumbing overhead and
+relative behavior, not real speedups — the ``predicted_us`` column carries
+the model's view (per-shard compute + collective + launch overhead), which
+is what the joint selector actually optimizes at paper scale.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.mapping import select_schedule
+from repro.core.scene import ConvScene
+from repro.plan import ConvOp
+from repro.shard import (halo_geometry, make_sharded_plan, pinned_shard_spec,
+                         shard_blocker, shard_sub_scene)
+
+_BASE = ConvScene(B=4, IC=8, OC=16, inH=12, inW=12, fltH=3, fltW=3,
+                  padH=1, padW=1, stdH=1, stdW=1)
+
+
+def _pinned(scene: ConvScene, axis: str, n: int):
+    choice = select_schedule(shard_sub_scene(scene, axis, n))
+    return make_sharded_plan(
+        scene, ConvOp.FPROP,
+        spec=pinned_shard_spec(scene, ConvOp.FPROP, axis, n, choice))
+
+
+def _io(scene: ConvScene):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return (jax.random.normal(k1, scene.in_shape(), jnp.float32),
+            jax.random.normal(k2, scene.flt_shape(), jnp.float32))
+
+
+def rows(base_batch: int = 4, max_shards: int = 8):
+    counts = [n for n in (1, 2, 4, 8)
+              if n <= min(jax.device_count(), max_shards)]
+    out = []
+
+    t1 = None
+    for n in counts:
+        sc = _BASE.with_batch(base_batch * n)
+        if n == 1:
+            plan = make_sharded_plan(sc, ConvOp.FPROP, max_shards=1)
+        else:
+            plan = _pinned(sc, "batch", n)
+        a, b = _io(sc)
+        us = time_call(plan.execute, a, b, iters=2)
+        if t1 is None:
+            t1 = us
+        out.append((
+            f"shard_weak_batch_n{n}", us,
+            f"shards={n};global_batch={sc.B};eff={t1 / us:.2f};"
+            f"predicted_us={plan.predicted_s * 1e6:.1f};"
+            f"coll_bytes={plan.spec.collective_bytes}"))
+
+    sc = _BASE.with_batch(8)
+    a, b = _io(sc)
+    th1 = None
+    for n in counts:
+        if n > 1 and shard_blocker(sc, "h", n):
+            continue
+        plan = (make_sharded_plan(sc, ConvOp.FPROP, max_shards=1)
+                if n == 1 else _pinned(sc, "h", n))
+        us = time_call(plan.execute, a, b, iters=2)
+        if th1 is None:
+            th1 = us
+        halo = halo_geometry(sc, n).halo if n > 1 else 0
+        out.append((
+            f"shard_halo_n{n}", us,
+            f"shards={n};speedup={th1 / us:.2f}x;halo_rows={halo};"
+            f"halo_bytes={plan.spec.collective_bytes};"
+            f"predicted_us={plan.predicted_s * 1e6:.1f}"))
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

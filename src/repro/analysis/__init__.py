@@ -24,14 +24,15 @@ from repro.analysis.footprint import vmem_bytes
 __all__ = [
     "vmem_bytes",
     # lazy (see __getattr__): verify-layer API
-    "Finding", "verify_plan", "verify_choice", "verify_point",
-    "sweep_scene", "sweep_scenes",
+    "Finding", "verify_plan", "verify_sharded_plan", "verify_choice",
+    "verify_point", "sweep_scene", "sweep_scenes",
     # lazy: lint-layer API
     "LintFinding", "lint_paths", "lint_source",
 ]
 
-_VERIFY_NAMES = ("Finding", "verify_plan", "verify_choice", "verify_point",
-                 "sweep_scene", "sweep_scenes")
+_VERIFY_NAMES = ("Finding", "verify_plan", "verify_sharded_plan",
+                 "verify_choice", "verify_point", "sweep_scene",
+                 "sweep_scenes")
 _LINT_NAMES = ("LintFinding", "lint_paths", "lint_source")
 
 

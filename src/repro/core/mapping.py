@@ -50,6 +50,15 @@ LANE = 128    # minor-dim tile
 SUBLANE = 8   # second-minor tile (fp32)
 MXU_DIM = 128
 
+# Interconnect constants for mesh-sharded execution (repro.shard).  The
+# joint grain x partition selector charges every inter-chip byte against
+# ICI_BW and every collective round against ICI_LATENCY_S, plus a fixed
+# per-dispatch shard_map launch cost — so a partition whose collective
+# term erases its per-shard compute win loses to shards=1 by construction.
+ICI_BW = 180e9                   # bytes/s per chip, one ring direction (v5e)
+ICI_LATENCY_S = 1e-6             # per collective round (ppermute/psum hop)
+SHARD_LAUNCH_OVERHEAD_S = 5e-6   # per sharded dispatch (shard_map glue)
+
 SCHEDULES = ("TB11", "TB18", "TB88")
 
 # Arithmetic-intensity band edges (FLOPs/byte) for cost-model scene classes.

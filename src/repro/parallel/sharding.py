@@ -44,6 +44,18 @@ _BASE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
     "router": ("fsdp", None),
     # mamba2
     "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    # Layout note for conv weights: these rules index *storage* dims, not
+    # semantic ones, so the convention must be pinned here.  `conv_w` is
+    # mamba2's depthwise conv1d weight stored (width, channels) — "tp" on
+    # the channel dim is an out-channel partition, the same decomposition
+    # repro.shard calls axis="oc" for conv2d.  MG3M conv scenes keep the
+    # paper's layouts (IN/OUT channel-last-of-spatial: [H, W, C, B]; FLT
+    # [fltH, fltW, IC, OC] — NHWC-activations / HWIO-filter in XLA terms,
+    # *not* OIHW): a filter partition there shards FLT dim 3 (OC), never
+    # dim 0/1 (spatial taps are never split), and an input-channel
+    # partition shards dim 2 of both operands plus psum — see
+    # repro/shard/spec.py.  If a checkpoint arrives OIHW, transpose at
+    # load; do not add an OIHW rule variant here.
     "conv_w": (None, "tp"),
     "A_log": (None,), "D": (None,), "dt_bias": (None,),
     "norm_scale": ("fsdp",),

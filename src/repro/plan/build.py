@@ -289,6 +289,31 @@ def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
     return jnp.pad(x, pads)
 
 
+# Operand transforms that turn each backward op into an fprop-shaped conv
+# over its exec scene.  One definition: the in-process executors below and
+# the mesh-sharded wrapper (repro.shard.plan) must agree byte-for-byte on
+# how dgrad/wgrad operands map onto the exec scene's (inp, flt) slots.
+def dgrad_operands(d_out: jax.Array, flt: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """(inp, flt) of the dgrad exec conv: dOUT against the rot180'd,
+    IC/OC-swapped filter."""
+    return d_out, jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)
+
+
+def wgrad_operands(inp: jax.Array, d_out: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """(inp, flt) of the wgrad exec conv: IN with (IC, B) swapped against
+    dOUT with (OC, B) swapped."""
+    return inp.swapaxes(2, 3), d_out.swapaxes(2, 3)
+
+
+def wgrad_finish(out: jax.Array) -> jax.Array:
+    """Wgrad exec-conv output -> FLT layout (the spatial slice-back to
+    fltH x fltW happens before this, via ``ExecSpec.out_h/out_w`` or the
+    sharded wrapper's explicit slice)."""
+    return out.transpose(0, 1, 3, 2)
+
+
 def _conv_body(inp: jax.Array, flt: jax.Array, scene: ConvScene,
                spec: ExecSpec, interpret: bool) -> jax.Array:
     """Kernel dispatch from a precomputed spec (no shape arithmetic here).
@@ -329,8 +354,8 @@ def _exec_dgrad(d_out, flt, scene: ConvScene, spec: ExecSpec, interpret: bool):
     # scene/spec here describe the *dgrad* scene (grad_input_scene); for a
     # strided forward it is lhs-dilated and the kernels read the compact
     # dOUT through the sentinel index maps.
-    flt_rot = jnp.flip(flt, axis=(0, 1)).swapaxes(2, 3)   # rot180 + IC<->OC
-    return _conv_body(d_out, flt_rot, scene, spec, interpret)
+    a, b = dgrad_operands(d_out, flt)   # rot180 + IC<->OC
+    return _conv_body(a, b, scene, spec, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scene", "spec", "interpret"))
@@ -340,9 +365,8 @@ def _exec_wgrad(inp, d_out, scene: ConvScene, spec: ExecSpec, interpret: bool):
     # the forward stride), output [fltH(+r), fltW(+r), OC, IC] sliced back
     # to the true filter dims (spec.out_h/out_w, inside _conv_body) and
     # transposed to the FLT layout.
-    out = _conv_body(inp.swapaxes(2, 3), d_out.swapaxes(2, 3), scene, spec,
-                     interpret)
-    return out.transpose(0, 1, 3, 2)
+    a, b = wgrad_operands(inp, d_out)
+    return wgrad_finish(_conv_body(a, b, scene, spec, interpret))
 
 
 # Reference executors (use_pallas=False and the recorded fallbacks).
@@ -432,6 +456,20 @@ class ConvPlan:
     @property
     def schedule(self) -> Optional[str]:
         return self.choice.schedule if self.choice else None
+
+    @property
+    def predicted_s(self) -> Optional[float]:
+        """Modeled whole-dispatch runtime (None on reference plans).  The
+        uniform accessor shared with ``ShardedConvPlan``, whose prediction
+        additionally carries the collective term."""
+        return self.choice.predicted_s if self.choice else None
+
+    @property
+    def shard_tag(self) -> Optional[str]:
+        """Partition fragment of this plan's registry signature — always
+        None for an in-process plan (see ``repro.shard`` for the mesh-aware
+        counterpart)."""
+        return None
 
     def describe(self) -> str:
         how = ("jnp-reference" if self.uses_reference else

@@ -41,22 +41,27 @@ _SCENE_FIELDS = ("B", "IC", "OC", "inH", "inW", "fltH", "fltW",
 
 def plan_signature(scene: ConvScene, op: Union[ConvOp, str],
                    policy: PolicySpec, interpret: bool,
-                   use_pallas: bool) -> str:
+                   use_pallas: bool, shard: Optional[str] = None) -> str:
     """Canonical registry key.  Dtype-alias-stable (via numpy dtype names)
     and explicit about everything that changes the executable.  Dilation
     axes are appended only when active, so undilated keys — the entire
-    pre-dilation artifact population — stay byte-identical."""
+    pre-dilation artifact population — stay byte-identical.  ``shard`` is a
+    ``ShardSpec.tag`` (``axis:n``, e.g. ``"h:8"``); appended only when set,
+    so unsharded keys likewise stay byte-identical and a sharded plan never
+    shadows its single-device sibling (``"none:1"`` — the joint selector's
+    fallback — is still a distinct key: same numerics, different wrapper)."""
     dt = jnp.dtype(scene.dtype).name
+    frag = f"|shard={shard}" if shard else ""
     return (f"v={PLAN_VERSION}|op={ConvOp(op).value}|pol={policy_tag(policy)}"
             f"|int={int(interpret)}|pl={int(use_pallas)}|dt={dt}"
             f"|B={scene.B}|IC={scene.IC}|OC={scene.OC}"
             f"|in={scene.inH}x{scene.inW}|flt={scene.fltH}x{scene.fltW}"
             f"|pad={scene.padH},{scene.padW}|std={scene.stdH},{scene.stdW}"
-            f"{scene.dilation_suffix()}")
+            f"{scene.dilation_suffix()}{frag}")
 
 
-def plan_to_dict(plan: ConvPlan) -> Dict:
-    return {
+def plan_to_dict(plan) -> Dict:
+    d = {
         "scene": {f: getattr(plan.scene, f) for f in _SCENE_FIELDS},
         "op": plan.op.value,
         "policy": plan.policy,
@@ -66,11 +71,28 @@ def plan_to_dict(plan: ConvPlan) -> Dict:
         "notes": list(plan.notes),
         "choice": choice_to_dict(plan.choice) if plan.choice else None,
     }
+    tag = getattr(plan, "shard_tag", None)
+    if tag:
+        # sharded identity: partition axis + ring size; cost/geometry terms
+        # are recomputed on reload (pinned_shard_spec), never trusted
+        d["shard"] = {"axis": plan.spec.axis, "n": plan.spec.n_shards}
+    return d
 
 
-def plan_from_dict(d: Dict) -> ConvPlan:
-    """Rebuild a plan from its artifact entry — no schedule resolution."""
+def plan_from_dict(d: Dict):
+    """Rebuild a plan from its artifact entry — no schedule resolution.
+    Sharded entries rebuild through ``assemble_sharded_plan`` and raise
+    ``ValueError`` when this process has fewer devices than the stored
+    ring (``load`` skips them, ``save`` keeps them — see
+    ``valid_plan_dict``)."""
     scene = ConvScene(**d["scene"])
+    sh = d.get("shard")
+    if sh:
+        from repro.shard.plan import assemble_sharded_plan
+        choice = choice_from_dict(d["choice"])
+        return assemble_sharded_plan(scene, d["op"], d["policy"],
+                                     sh["axis"], int(sh["n"]), choice,
+                                     interpret=bool(d.get("interpret", True)))
     choice = choice_from_dict(d["choice"]) if d.get("choice") else None
     return assemble_plan(scene, d["op"], d["policy"], choice,
                          interpret=bool(d.get("interpret", True)),
@@ -85,9 +107,24 @@ def valid_plan_dict(d) -> bool:
     rides the artifact forever and warn-spams every warm-start.  Cheap for
     well-formed entries: a pinned choice assembles without any schedule
     resolution, and a choice-less (reference) entry short-circuits before
-    the selector."""
+    the selector.
+
+    One deliberate asymmetry: a *sharded* entry is validated structurally
+    (identity re-derives), not by binding a device ring — the ring is an
+    environment property, and an 8-shard plan saved by an 8-device host
+    must survive a 1-device process's merge-on-save even though that
+    process's ``load`` skips it."""
     if not isinstance(d, dict):
         return False
+    if d.get("shard"):
+        try:
+            from repro.shard.plan import pinned_shard_spec
+            pinned_shard_spec(ConvScene(**d["scene"]), d["op"],
+                              d["shard"]["axis"], int(d["shard"]["n"]),
+                              choice_from_dict(d["choice"]))
+            return True
+        except (KeyError, TypeError, ValueError):
+            return False
     try:
         plan_from_dict(d)
         return True
@@ -149,15 +186,17 @@ class PlanRegistry:
 
     def key(self, scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP,
             policy: PolicySpec = "analytic", interpret: bool = True,
-            use_pallas: bool = True) -> str:
-        return plan_signature(scene, op, policy, interpret, use_pallas)
+            use_pallas: bool = True, shard: Optional[str] = None) -> str:
+        return plan_signature(scene, op, policy, interpret, use_pallas, shard)
 
     # -- lookup ------------------------------------------------------------
     def get(self, scene: ConvScene, op: Union[ConvOp, str] = ConvOp.FPROP, *,
             policy: PolicySpec = "analytic", interpret: bool = True,
-            use_pallas: bool = True) -> Optional[ConvPlan]:
-        """Registered plan, or None on miss (LRU-touching)."""
-        k = self.key(scene, op, policy, interpret, use_pallas)
+            use_pallas: bool = True, shard: Optional[str] = None):
+        """Registered plan, or None on miss (LRU-touching).  ``shard`` is a
+        ``ShardSpec.tag`` and selects the mesh-sharded entry population
+        (``ShardedConvPlan``); ``None`` addresses unsharded plans only."""
+        k = self.key(scene, op, policy, interpret, use_pallas, shard)
         with self._lock:
             plan = self._mem.get(k)
             if plan is None:
@@ -167,9 +206,10 @@ class PlanRegistry:
             self._c_hits.inc()
             return plan
 
-    def put(self, plan: ConvPlan) -> str:
+    def put(self, plan) -> str:
         k = plan_signature(plan.scene, plan.op, plan.policy, plan.interpret,
-                           plan.use_pallas)
+                           plan.use_pallas,
+                           shard=getattr(plan, "shard_tag", None))
         with self._lock:
             self._mem[k] = plan
             self._mem.move_to_end(k)

@@ -30,6 +30,16 @@ the request completes, so coalesced output matches per-request execution.
 WGRAD *contracts over* B — batching requests along B would sum their
 gradients — so the server refuses it; use ``ConvPlan`` directly.
 
+``mesh=`` extends the same argument one level up: a coalesced bucket's B
+axis is exactly the independent-GEMM-column axis the mesh's data dimension
+partitions, so in mesh mode every (layer x op x bucket) prewarms a
+``ShardedConvPlan`` (``repro.shard``, ``axes=("batch",)``) across the
+mesh's data-axis device ring instead of a single-device plan.  The joint
+selector still owns the decision — a bucket too small to amortize the
+shard_map launch falls back to ``n_shards == 1`` — and the chosen partition
+tag per (layer, op, bucket) is recorded at prewarm, so steady state stays
+a zero-resolution registry lookup (tag dict hit + shard-keyed ``get``).
+
 Observability: every server owns a ``MetricRegistry`` (``repro.serve.*``
 counters + queue-wait/dispatch histograms; ``stats(since=snapshot())``
 windows them) and dispatches under a ``repro.serve.dispatch`` span when the
@@ -211,8 +221,22 @@ class ConvServer:
                  on_dispatch: Optional[Callable[[DispatchRecord], None]]
                  = None, metrics: Optional[MetricRegistry] = None,
                  tracer: Optional[Tracer] = None,
-                 drift: Optional["drift_mod.DriftMonitor"] = None):
+                 drift: Optional["drift_mod.DriftMonitor"] = None,
+                 mesh=None):
+        if mesh is not None and not use_pallas:
+            raise ValueError(
+                "mesh serving requires use_pallas=True: sharded plans "
+                "always dispatch Pallas per shard")
         self.registry = registry if registry is not None else PlanRegistry()
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.launch.mesh import data_devices
+            self._ring: Optional[Tuple] = data_devices(mesh)
+        else:
+            self._ring = None
+        # mesh mode: chosen partition tag per (layer, op, bucket), recorded
+        # at prewarm so steady state never re-runs the joint selector
+        self._shard_tags: Dict[Tuple[str, ConvOp, int], str] = {}
         self.policy = policy
         self.interpret = interpret
         self.use_pallas = use_pallas
@@ -297,10 +321,13 @@ class ConvServer:
         with self._lock:
             families = list(self._layers.values())
         for fam in families:
-            built += self.registry.warm(
-                [fam.base], ops=fam.ops, buckets=fam.ladder,
-                policy=self.policy, interpret=self.interpret,
-                use_pallas=self.use_pallas)
+            if self._ring is not None:
+                built += self._prewarm_sharded(fam)
+            else:
+                built += self.registry.warm(
+                    [fam.base], ops=fam.ops, buckets=fam.ladder,
+                    policy=self.policy, interpret=self.interpret,
+                    use_pallas=self.use_pallas)
         if compile:
             for fam in families:
                 for op, bucket in itertools.product(fam.ops, fam.ladder):
@@ -380,10 +407,48 @@ class ConvServer:
             self._g_queue.set(len(self._queue))
             return group
 
-    def _plan(self, fam: _Family, op: ConvOp, bucket: int) -> ConvPlan:
-        plan = self.registry.get(fam.base.with_batch(bucket), op,
-                                 policy=self.policy, interpret=self.interpret,
-                                 use_pallas=self.use_pallas)
+    def _prewarm_sharded(self, fam: _Family) -> int:
+        """Mesh-mode warm: jointly select (grain x partition) for every
+        (op x bucket) over the mesh's data-axis ring (``axes=("batch",)`` —
+        the bucket's B axis is the coalescing axis, provably safe to split),
+        register the sharded plans, and pin each chosen partition tag.
+        Like ``PlanRegistry.warm`` this bumps no hit/miss counters, and an
+        artifact-loaded sharded plan satisfies the warm (selection is
+        deterministic, so the recomputed tag matches the stored key)."""
+        built = 0
+        for op in fam.ops:
+            for bucket in fam.ladder:
+                plan = self._build_sharded(fam.base.with_batch(bucket), op)
+                k = self.registry.key(plan.scene, op, self.policy,
+                                      self.interpret, self.use_pallas,
+                                      shard=plan.shard_tag)
+                if k not in self.registry:
+                    built += 1
+                self.registry.put(plan)
+                with self._lock:
+                    self._shard_tags[(fam.layer, op, bucket)] = plan.shard_tag
+        return built
+
+    def _build_sharded(self, scene: ConvScene, op: ConvOp):
+        from repro.shard.plan import make_sharded_plan
+        return make_sharded_plan(scene, op, policy=self.policy,
+                                 interpret=self.interpret,
+                                 devices=self._ring, axes=("batch",),
+                                 model=self.cost_model)
+
+    def _plan(self, fam: _Family, op: ConvOp, bucket: int):
+        scene = fam.base.with_batch(bucket)
+        if self._ring is not None:
+            with self._lock:
+                tag = self._shard_tags.get((fam.layer, op, bucket))
+            plan = (self.registry.get(scene, op, policy=self.policy,
+                                      interpret=self.interpret,
+                                      use_pallas=self.use_pallas, shard=tag)
+                    if tag else None)
+        else:
+            plan = self.registry.get(scene, op, policy=self.policy,
+                                     interpret=self.interpret,
+                                     use_pallas=self.use_pallas)
         if plan is None:
             self._c_plan_misses.inc()
             if self.strict:
@@ -393,9 +458,14 @@ class ConvServer:
                     f"forbids steady-state plan builds)")
             # build + put directly: re-entering get_or_build would record
             # the same miss twice and deflate the registry's hit_rate
-            plan = make_plan(fam.base.with_batch(bucket), op,
-                             policy=self.policy, interpret=self.interpret,
-                             use_pallas=self.use_pallas)
+            if self._ring is not None:
+                plan = self._build_sharded(scene, op)
+                with self._lock:
+                    self._shard_tags[(fam.layer, op, bucket)] = plan.shard_tag
+            else:
+                plan = make_plan(scene, op, policy=self.policy,
+                                 interpret=self.interpret,
+                                 use_pallas=self.use_pallas)
             self.registry.put(plan)
             self._c_plan_builds.inc()
         return plan
@@ -466,9 +536,12 @@ class ConvServer:
                     and plan.exec_scene is not None):
                 # blocked above, so exec_s is an honest kernel wall-clock:
                 # audit the cost model with it
+                # plan.predicted_s, not choice.predicted_s: sharded plans
+                # predict the whole dispatch (collective + launch terms),
+                # and that is what exec_s measures
                 self.drift.observe(
                     drift_mod.scene_class(plan.exec_scene, plan.choice),
-                    plan.choice.predicted_s, exec_s)
+                    plan.predicted_s, exec_s)
             # args only on success: a failed dispatch leaves the span with
             # its error tag and never becomes a DispatchRecord
             sp.set(layer=fam.layer, op=op.value, bucket=bucket,

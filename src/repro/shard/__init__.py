@@ -1,0 +1,32 @@
+"""repro.shard — mesh-sharded ConvPlan execution.
+
+Extends the plan-once / execute-many stack across a 1-D device ring:
+``select_shard_spec`` scores (schedule x partition) jointly — per-shard
+MG3M closed-form cost plus a collective term (halo bytes for spatial-H,
+psum bytes for reduction partitions) plus a fixed shard_map launch cost —
+and ``ShardedConvPlan`` executes the winner under ``shard_map`` with
+``lax.ppermute`` halo exchange / ``lax.psum`` reductions.  The selector
+falls back to ``n_shards == 1`` whenever the collective term makes every
+partition a predicted loss, so opting a scene into sharding is never a
+predicted regression.
+"""
+from repro.shard.spec import (PARTITION_AXES, UNSHARDED_AXIS, HaloGeometry,
+                              ShardSpec, collective_bytes,
+                              collective_seconds, halo_geometry,
+                              select_shard_spec, shard_blocker,
+                              shard_sub_scene)
+from repro.shard.plan import (ShardedConvPlan, assemble_sharded_plan,
+                              make_sharded_plan, pinned_shard_spec)
+from repro.shard.autodiff import (ShardedTrainingPlans,
+                                  make_sharded_training_plans,
+                                  sharded_conv_with_plans)
+
+__all__ = [
+    "PARTITION_AXES", "UNSHARDED_AXIS", "HaloGeometry", "ShardSpec",
+    "collective_bytes", "collective_seconds", "halo_geometry",
+    "select_shard_spec", "shard_blocker", "shard_sub_scene",
+    "ShardedConvPlan", "assemble_sharded_plan", "make_sharded_plan",
+    "pinned_shard_spec",
+    "ShardedTrainingPlans", "make_sharded_training_plans",
+    "sharded_conv_with_plans",
+]

@@ -95,6 +95,36 @@ def test_sanitize_drops_indivisible():
     assert fixed2["a"] == P("model", None)
 
 
+def test_sanitize_drops_per_dim_not_per_leaf():
+    """One indivisible dim must not strip the whole spec: the divisible
+    dim keeps its axis while only the offender is dropped."""
+    spec = {"a": P("model", "data")}
+    shapes = {"a": jax.ShapeDtypeStruct((40, 32), jax.numpy.float32)}
+    fixed = sh.sanitize_pspecs(spec, shapes, SP)
+    assert fixed["a"] == P(None, "data")          # 40 % 16 != 0, 32 % 16 == 0
+
+
+def test_sanitize_tuple_axes_use_product():
+    """A multi-axis dim shards over the *product* of its mesh axes — a dim
+    divisible by one axis but not the product must be dropped."""
+    spec = {"a": P(("pod", "data"), None)}
+    shapes = {"a": jax.ShapeDtypeStruct((16, 8), jax.numpy.float32)}
+    fixed = sh.sanitize_pspecs(spec, shapes, MP)
+    assert fixed["a"] == P(None, None)            # 16 % (2*16) != 0
+    shapes2 = {"a": jax.ShapeDtypeStruct((64, 8), jax.numpy.float32)}
+    fixed2 = sh.sanitize_pspecs(spec, shapes2, MP)
+    assert fixed2["a"] == P(("pod", "data"), None)
+
+
+def test_sanitize_pads_short_specs_to_rank():
+    """A spec shorter than the tensor rank is extended with None — the
+    missing trailing dims are replicated, never implicitly sharded."""
+    spec = {"a": P("model")}
+    shapes = {"a": jax.ShapeDtypeStruct((32, 8, 4), jax.numpy.float32)}
+    fixed = sh.sanitize_pspecs(spec, shapes, SP)
+    assert fixed["a"] == P("model", None, None)
+
+
 def test_batch_specs_tp_grain():
     cfg = get_config("qwen2.5-3b")
     tp_on = sh.batch_pspecs(cfg, "train_4k", SP, tp=True)
