@@ -7,7 +7,7 @@ import os
 
 from benchmarks import (batch, calibration, channels, cnns, filters,
                         granularity, padstride, plans, serving, sharding,
-                        tuned)
+                        training, tuned)
 from benchmarks.common import emit, parse_derived
 
 
@@ -35,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
                          "padstride,cnns,granularity,roofline,tuned,"
-                         "calibration,plans,serving,sharding")
+                         "calibration,plans,serving,sharding,training")
     ap.add_argument("--plan", action="store_true",
                     help="also report plan-amortized dispatch overhead "
                          "(plan-once execute vs legacy per-call resolution)")
@@ -48,12 +48,14 @@ def main() -> None:
             "cnns": cnns.rows, "granularity": granularity.rows,
             "roofline": roofline_rows, "tuned": tuned.rows,
             "calibration": calibration.rows, "plans": plans.rows,
-            "serving": serving.rows, "sharding": sharding.rows}
-    # the plans/serving/sharding tables are opt-in (they JIT-warm whole plan
-    # ladders or need a forced multi-device host): --plan appends plans,
-    # --only plans/serving/sharding isolates them
+            "serving": serving.rows, "sharding": sharding.rows,
+            "training": training.rows}
+    # the plans/serving/sharding/training tables are opt-in (they JIT-warm
+    # whole plan ladders, need a forced multi-device host, or compile train
+    # steps): --plan appends plans, --only isolates the rest
     only = args.only.split(",") if args.only else [
-        m for m in mods if m not in ("plans", "serving", "sharding")]
+        m for m in mods if m not in ("plans", "serving", "sharding",
+                                     "training")]
     if args.plan and "plans" not in only:
         only.append("plans")
     if args.json:

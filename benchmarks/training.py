@@ -1,0 +1,121 @@
+"""Plan-driven vs legacy per-call CNN training step time, plus microbatch
+scaling (ISSUE 9 acceptance: >= 1.3x steady-state step-time improvement).
+
+Legacy = the pre-refactor reality: an un-fused eager step whose forward
+re-fetches per-layer plans from the registry on every call, eager AdamW,
+no donation — every conv a separate dispatch.  Plan = the
+``repro.train.cnn`` path: one jitted, donated step over a prewarmed
+``ModelPlans``.  Geometry is tiny (dispatch overhead dominates) because
+dispatch amortization is exactly what the refactor buys; the kernels
+themselves are identical in both columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.data.pipeline import SyntheticImages
+from repro.models.cnn import init_small_cnn, small_cnn_forward, small_cnn_plans
+from repro.train import cnn as tc
+from repro.train.optimizer import AdamWConfig, adamw_update
+from repro.train.step import TrainState
+
+_B, _RES, _WIDTH = 8, 8, 4
+
+
+def _setup(batch: int = _B):
+    params = init_small_cnn(jax.random.PRNGKey(0), width=_WIDTH)
+    data = SyntheticImages(batch, _RES, seed=1, noise=0.3)
+    batch0 = jax.tree.map(jnp.asarray, data.batch_at(0))
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    return params, batch0, cfg
+
+
+def _legacy_step(params, state_opt, batch, cfg):
+    """Pre-refactor step: eager value_and_grad, per-call plan fetch inside
+    the forward (``plans=None``), eager un-donated AdamW."""
+    def loss(p):
+        logits = small_cnn_forward(p, batch["images"], use_pallas=True)
+        return tc.softmax_cross_entropy(logits, batch["labels"])
+
+    l, grads = jax.value_and_grad(loss)(params)
+    new_p, new_opt, _ = adamw_update(cfg, params, grads, state_opt)
+    return new_p, new_opt, l
+
+
+def rows():
+    out = []
+    params, batch0, cfg = _setup()
+
+    # -- plan-driven fused step (steady state) ------------------------------
+    plans = small_cnn_plans(params, _B, _RES)
+    step = tc.build_cnn_train_step(plans, cfg)
+    jstep = tc.jit_train_step(step)
+    # the state evolves through the timed calls (donation consumes the old
+    # buffers) — exactly how a real training loop runs in steady state
+    box = [tc.init_train_state(jax.tree.map(jnp.array, params))]
+
+    def plan_call():
+        box[0], ms = jstep(box[0], batch0)
+        return ms["loss"]
+
+    us_plan = time_call(plan_call, iters=5, warmup=2)
+
+    # -- legacy per-call step ----------------------------------------------
+    state0 = tc.init_train_state(params)
+    us_legacy = time_call(
+        lambda: _legacy_step(params, state0.opt, batch0, cfg)[2],
+        iters=5, warmup=2)
+    speedup = us_legacy / us_plan
+    out.append(("train_step_plan", us_plan,
+                f"legacy_us={us_legacy:.1f};"
+                f"speedup_vs_legacy={speedup:.2f};"
+                f"batch={_B}"))
+
+    # -- K-step fused loop (olmax lax.scan, unroll=2) ----------------------
+    k = 4
+    loop = tc.build_cnn_train_loop(step, unroll=2)
+    data = SyntheticImages(_B, _RES, seed=2, noise=0.3)
+    stacked = {key: jnp.stack([jnp.asarray(data.batch_at(i)[key])
+                               for i in range(k)])
+               for key in ("images", "labels")}
+    lbox = [tc.init_train_state(jax.tree.map(jnp.array, params))]
+
+    def loop_call():
+        lbox[0], ms = loop(lbox[0], stacked)
+        return ms["loss"]
+
+    us_loop = time_call(loop_call, iters=3, warmup=1)
+    out.append(("train_loop_unroll2", us_loop / k,
+                f"k={k};loop_us={us_loop:.1f};"
+                f"vs_single_step={us_plan / (us_loop / k):.2f}"))
+
+    # -- microbatch scaling: same global batch, growing accumulation depth --
+    global_b = 8
+    for n_mb in (1, 2, 4):
+        mb = global_b // n_mb
+        p2, b2, cfg2 = _setup(global_b)
+        mb_plans = small_cnn_plans(p2, mb, _RES)
+        buckets = tc.make_grad_buckets(p2)
+        step_mb = tc.build_cnn_train_step(mb_plans, cfg2,
+                                          n_microbatches=n_mb,
+                                          buckets=buckets)
+        jstep_mb = tc.jit_train_step(step_mb)
+        mbox = [tc.init_train_state(jax.tree.map(jnp.array, p2))]
+
+        def mb_call(js=jstep_mb, bx=mbox, bb=b2):
+            bx[0], ms = js(bx[0], bb)
+            return ms["loss"]
+
+        us_mb = time_call(mb_call, iters=3, warmup=2)
+        out.append((f"train_step_mb{n_mb}", us_mb,
+                    f"microbatches={n_mb};microbatch_b={mb};"
+                    f"us_per_example={us_mb / global_b:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    print("name,us_per_call,derived")
+    emit(rows())

@@ -3,6 +3,9 @@
 * `SyntheticLM`: step-indexed synthetic token stream — batch contents are a
   pure function of (seed, step), so resume-after-failure is exact and
   requires only the step counter in the checkpoint.
+* `SyntheticImages`: the CNN-training counterpart — step-indexed NHWC image
+  batches with learnable class structure (per-class mean patterns + noise),
+  so a smoke train run has a loss that genuinely descends.
 * `TokenFileDataset`: memory-mapped flat token file (.bin/.npy), sequence-
   chunked, shuffled by a step-indexed permutation, sharded per host.
 * `Prefetcher`: background thread prefetch (double-buffering at the input
@@ -35,6 +38,45 @@ class SyntheticLM:
         toks = rng.integers(0, self.vocab, (local, self.seq + 1),
                             dtype=np.int32)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class SyntheticImages:
+    """Pure-function-of-step synthetic image batches (images NHWC f32,
+    labels int32) with real class structure: each class has a fixed random
+    mean pattern and samples are pattern + Gaussian noise, so training a
+    classifier on the stream actually reduces the loss (a uniform-noise
+    stream would pin it at log(n_classes))."""
+
+    def __init__(self, batch: int, res: int, channels: int = 3,
+                 n_classes: int = 10, seed: int = 0, noise: float = 0.5,
+                 host_id: int = 0, n_hosts: int = 1):
+        if batch % n_hosts != 0:
+            raise ValueError(
+                f"batch {batch} not divisible by n_hosts {n_hosts}")
+        self.batch, self.res, self.channels = batch, res, channels
+        self.n_classes, self.seed, self.noise = n_classes, seed, noise
+        self.host_id, self.n_hosts = host_id, n_hosts
+        # class prototypes are a function of seed only — every step (and
+        # every host) sees the same class structure
+        proto_rng = np.random.default_rng(np.random.SeedSequence([seed]))
+        self.prototypes = proto_rng.standard_normal(
+            (n_classes, res, res, channels)).astype(np.float32)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+        local = self.batch // self.n_hosts
+        labels = rng.integers(0, self.n_classes, local, dtype=np.int32)
+        noise = rng.standard_normal(
+            (local, self.res, self.res, self.channels)).astype(np.float32)
+        images = self.prototypes[labels] + self.noise * noise
+        return {"images": images, "labels": labels}
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         step = 0

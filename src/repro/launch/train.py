@@ -52,10 +52,20 @@ def main() -> None:
     opt_cfg = O.AdamWConfig(total_steps=args.steps,
                             moments_dtype="bfloat16"
                             if cfg.param_count() >= 30e9 else "float32")
-    step_fn, hooks = S.build_train_step(cfg, mesh, opt_cfg, plan)
     data = SyntheticLM(cfg.vocab, batch_size, seq, host_id=jax.process_index(),
                        n_hosts=jax.process_count())
     monitor = StragglerMonitor()
+
+    # the same explicit-shardings + donated-state jit the dry run lowers —
+    # launcher and lower_train_step share one construction (jit_train_step)
+    import functools
+    params_shape = jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    state_shape = S.TrainState(params_shape, jax.eval_shape(
+        functools.partial(O.init_opt_state,
+                          moments_dtype=opt_cfg.moments_dtype), params_shape))
+    jstep, hooks, sspec = S.jit_train_step(cfg, args.shape, mesh, plan,
+                                           opt_cfg, state_shape)
 
     with mesh:
         with ctx.activation_sharding(hooks):
@@ -65,12 +75,10 @@ def main() -> None:
             start = 0
             last = ckpt.latest_step(args.ckpt_dir)
             if last is not None:
-                sspec = S.state_pspecs(cfg, state, mesh, plan.tp)
                 state, extra = ckpt.restore(args.ckpt_dir, last, state,
                                             mesh=mesh, specs=sspec)
                 start = extra["next_step"]
                 print(f"resumed at step {start}")
-            jstep = jax.jit(step_fn, donate_argnums=(0,))
             for step in range(start, args.steps):
                 batch = jax.tree.map(jnp.asarray, data.batch_at(step))
                 t0 = time.time()

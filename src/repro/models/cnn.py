@@ -1,12 +1,19 @@
 """CNN zoo for the paper's own evaluation (Fig. 13): AlexNet, VGG, GoogLeNet,
 ResNet, SqueezeNet, YOLO — as lists of convolution *scenes* (the paper
 benchmarks per-layer conv hardware efficiency, not end-to-end accuracy),
-plus a small runnable CNN classifier built on mg3m_conv_nhwc for the
-end-to-end example/tests.
+plus runnable trainable classifiers (a small 3-conv CNN and a scenes-backed
+VGG-style net) whose every convolution dispatches through prewarmed
+``ConvPlan`` triples.
+
+Layout discipline: the plan path converts NHWC to the paper's plan layout
+``[H, W, C, B]`` exactly once at model entry and back never — relu, the
+global average pool, and the head all speak plan layout — so a forward or
+training step performs zero per-layer transposes (the seed code transposed
+twice per layer per step).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +23,18 @@ from repro.core.scene import ConvScene
 from repro.models.layers import trunc_normal
 
 Params = Dict[str, jax.Array]
+
+
+def nhwc_to_plan(x: jax.Array) -> jax.Array:
+    """NHWC -> plan layout [H, W, C, B] (the paper's IN layout) — the one
+    entry transpose of the plan-driven model path."""
+    return jnp.transpose(x, (1, 2, 3, 0))
+
+
+def plan_to_nhwc(x: jax.Array) -> jax.Array:
+    """Plan layout [H, W, C, B] -> NHWC — the matching exit transpose (the
+    classifier heads below never need it: they pool in plan layout)."""
+    return jnp.transpose(x, (3, 0, 1, 2))
 
 
 def _s(b, ic, oc, hw, f, pad, std, in_hw=None) -> ConvScene:
@@ -140,14 +159,15 @@ def small_cnn_scenes(p: Params, batch: int, res: int,
 
 def small_cnn_plans(p: Params, batch: int, res: int, *,
                     dtype: str = "float32", policy=None,
-                    interpret: bool = True) -> Dict[str, "TrainingPlans"]:
-    """Pre-build the (fprop, dgrad, wgrad) plan triple of every layer —
-    plan-once, then every forward/backward step is pure dispatch."""
-    from repro.core.autodiff import make_training_plans
-    from repro.plan import default_registry
-    return {name: make_training_plans(sc, policy=policy, interpret=interpret,
-                                      registry=default_registry())
-            for name, sc in small_cnn_scenes(p, batch, res, dtype).items()}
+                    interpret: bool = True, devices=None) -> "ModelPlans":
+    """Pre-build the (fprop, dgrad, wgrad) plan triple of every layer into
+    one ``ModelPlans`` — plan-once (one ``PlanRegistry.warm`` pass), then
+    every forward/backward step is pure dispatch.  ``devices`` (a
+    data-parallel ring) builds mesh-sharded triples instead."""
+    from repro.core.autodiff import make_model_plans
+    return make_model_plans(small_cnn_scenes(p, batch, res, dtype),
+                            policy=policy, interpret=interpret,
+                            devices=devices)
 
 
 def small_cnn_forward(p: Params, x: jax.Array, *, use_pallas: bool = False,
@@ -155,26 +175,99 @@ def small_cnn_forward(p: Params, x: jax.Array, *, use_pallas: bool = False,
     """x: [B, H, W, C] -> logits [B, n_classes].  All convs via MG3MConv.
 
     use_pallas=True routes through the differentiable plan path
-    (core/autodiff.conv_with_plans) so the whole CNN trains through the
-    Pallas forward.  Pass ``plans`` (from ``small_cnn_plans``) to use
-    pre-built per-layer plans; otherwise they are fetched from the default
-    PlanRegistry on first use."""
-    from repro.core.autodiff import conv_with_plans
-
-    if plans is None and use_pallas:
+    (``core/autodiff.apply_conv``) so the whole CNN trains through the
+    Pallas forward; the activation enters plan layout once and stays there
+    across c1 -> c2 -> c3 -> pool -> head (no per-layer transposes).  Pass
+    ``plans`` (from ``small_cnn_plans``) to use pre-built per-layer plans;
+    otherwise they are fetched from the default PlanRegistry on first use.
+    """
+    if not use_pallas:
+        z = x
+        for name, stride in _LAYER_STRIDES.items():
+            z = jax.nn.relu(mg3m_conv_nhwc(z, p[name],
+                                           stride=(stride, stride),
+                                           padding=(1, 1), schedule=schedule,
+                                           use_pallas=False))
+        return z.mean(axis=(1, 2)) @ p["head"]
+    if plans is None:
         plans = small_cnn_plans(p, x.shape[0], x.shape[1],
                                 dtype=str(x.dtype), policy=schedule)
+    return cnn_forward_planned(p, x, plans, layer_order=tuple(_LAYER_STRIDES))
 
-    def conv(x, name, stride):
-        w = p[name]
-        if not use_pallas:
-            return mg3m_conv_nhwc(x, w, stride=(stride, stride),
-                                  padding=(1, 1), schedule=schedule,
-                                  use_pallas=False)
-        out = conv_with_plans(jnp.transpose(x, (1, 2, 3, 0)), w, plans[name])
-        return jnp.transpose(out, (3, 0, 1, 2))
-    x = jax.nn.relu(conv(x, "c1", 1))
-    x = jax.nn.relu(conv(x, "c2", 2))
-    x = jax.nn.relu(conv(x, "c3", 2))
-    x = x.mean(axis=(1, 2))                       # global average pool
-    return x @ p["head"]
+
+def cnn_forward_planned(p: Params, x: jax.Array, plans,
+                        layer_order: Sequence[str] = ()) -> jax.Array:
+    """Plan-layout forward shared by every trainable CNN here: one NHWC ->
+    [H,W,C,B] transpose at entry, per-layer ``apply_conv`` + relu with the
+    activation held in plan layout across the whole stack, global average
+    pool over the leading spatial dims, then the linear head.
+
+    ``plans`` is a ``ModelPlans`` (or any name -> triple mapping);
+    ``layer_order`` defaults to the plans' own layer order.
+    """
+    from repro.core.autodiff import apply_conv
+    names = tuple(layer_order) or tuple(plans)
+    z = nhwc_to_plan(x)
+    for name in names:
+        z = jax.nn.relu(apply_conv(z, p[name], plans[name]))
+    pooled = z.mean(axis=(0, 1))                  # [C, B] — still plan layout
+    return pooled.T @ p["head"]
+
+
+# ---------------------------------------------------------------------------
+# Scenes-backed trainable CNN (VGG-style): the scene chain IS the model
+# ---------------------------------------------------------------------------
+def vgg_style_scenes(batch: int, res: int = 16, in_ch: int = 3,
+                     stages: Sequence[Tuple[int, int]] = ((16, 1), (32, 2),
+                                                          (64, 2)),
+                     dtype: str = "float32") -> Dict[str, ConvScene]:
+    """A chained VGG-style scene list: 3x3 pad-1 convs, widths and strides
+    from ``stages`` (stride-2 convs in place of pooling).  The returned
+    dict is a valid ``init_cnn_from_scenes``/``make_model_plans`` input."""
+    scenes: Dict[str, ConvScene] = {}
+    hw, ic = res, in_ch
+    for i, (width, stride) in enumerate(stages):
+        sc = ConvScene(B=batch, IC=ic, OC=width, inH=hw, inW=hw,
+                       fltH=3, fltW=3, padH=1, padW=1,
+                       stdH=stride, stdW=stride, dtype=dtype)
+        scenes[f"v{i}"] = sc
+        hw, ic = sc.outH, width
+    return scenes
+
+
+def validate_scene_chain(scenes: Mapping[str, ConvScene]) -> None:
+    """Raise ``ValueError`` unless consecutive scenes chain: layer i's
+    output channels and spatial dims must be layer i+1's input."""
+    if not scenes:
+        raise ValueError("a scenes-backed CNN needs at least one conv scene")
+    items = list(scenes.items())
+    for (na, a), (nb, b) in zip(items, items[1:]):
+        if a.OC != b.IC:
+            raise ValueError(f"scene chain breaks at {na} -> {nb}: "
+                             f"OC={a.OC} feeds IC={b.IC}")
+        if (a.outH, a.outW) != (b.inH, b.inW):
+            raise ValueError(f"scene chain breaks at {na} -> {nb}: output "
+                             f"{a.outH}x{a.outW} feeds input "
+                             f"{b.inH}x{b.inW}")
+        if a.B != b.B:
+            raise ValueError(f"scene chain breaks at {na} -> {nb}: "
+                             f"batch {a.B} vs {b.B}")
+
+
+def init_cnn_from_scenes(key, scenes: Mapping[str, ConvScene],
+                         n_classes: int = 10, dtype=jnp.float32) -> Params:
+    """Parameters of the scenes-backed CNN: one FLT[h,w,IC,OC] per scene
+    (paper layout — no transpose between init and plan execution) plus the
+    linear head off the global average pool."""
+    validate_scene_chain(scenes)
+    items = list(scenes.items())
+    ks = jax.random.split(key, len(items) + 1)
+    p: Params = {}
+    for k, (name, sc) in zip(ks, items):
+        std = 0.1 if sc.IC <= 4 else (2.0 / (sc.fltH * sc.fltW
+                                             * sc.IC)) ** 0.5
+        p[name] = trunc_normal(k, (sc.fltH, sc.fltW, sc.IC, sc.OC),
+                               std, dtype)
+    p["head"] = trunc_normal(ks[-1], (items[-1][1].OC, n_classes),
+                             0.05, dtype)
+    return p

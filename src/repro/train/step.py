@@ -148,6 +148,36 @@ def state_pspecs(cfg: ArchConfig, state_shapes: TrainState, mesh,
                       opt=opt.OptState(m=mspec, v=mspec, step=P()))
 
 
+def jit_train_step(cfg: ArchConfig, shape_name: str, mesh, plan: StepPlan,
+                   opt_cfg: opt.AdamWConfig, state_like: TrainState):
+    """Jit the train step with explicit in/out shardings derived from
+    ``state_pspecs``/``batch_pspecs`` and the state buffers donated — the
+    single construction both the launcher (which executes it) and
+    ``lower_train_step`` (which lowers it for a dry-run cell) share, so
+    what the dry run inspects is byte-for-byte what production runs.
+
+    ``state_like`` may be concrete arrays or ``jax.eval_shape`` structs.
+    Trace/call under ``with mesh:`` and ``ctx.activation_sharding(hooks)``.
+    Returns (jitted_step, hooks, sspec).
+    """
+    step_fn, hooks = build_train_step(cfg, mesh, opt_cfg, plan)
+    state_shape = jax.eval_shape(lambda s: s, state_like)
+    sspec = state_pspecs(cfg, state_shape, mesh, plan.tp)
+    bspec = sharding.batch_pspecs(cfg, shape_name, mesh, plan.tp)
+    metrics_shardings = None
+    if plan.skip_update:  # grads output must carry the param shardings
+        metrics_shardings = {"loss": None,
+                             "grads": sharding.named(mesh, sspec.params)}
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(sharding.named(mesh, sspec),
+                      sharding.named(mesh, bspec)),
+        out_shardings=(sharding.named(mesh, sspec), metrics_shardings),
+        donate_argnums=(0,),
+    )
+    return jitted, hooks, sspec
+
+
 def lower_train_step(cfg: ArchConfig, shape_name: str, mesh,
                      plan: Optional[StepPlan] = None,
                      opt_cfg: Optional[opt.AdamWConfig] = None,
@@ -159,7 +189,6 @@ def lower_train_step(cfg: ArchConfig, shape_name: str, mesh,
     if opt_cfg is None:
         moments = "bfloat16" if cfg.param_count() >= 30e9 else "float32"
         opt_cfg = opt.AdamWConfig(moments_dtype=moments)
-    step_fn, hooks = build_train_step(cfg, mesh, opt_cfg, plan)
 
     params_shape = jax.eval_shape(
         functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
@@ -168,24 +197,11 @@ def lower_train_step(cfg: ArchConfig, shape_name: str, mesh,
                                  opt.init_opt_state,
                                  moments_dtype=opt_cfg.moments_dtype),
                                  params_shape))
-    sspec = state_pspecs(cfg, state_shape, mesh, plan.tp)
-    bspec = sharding.batch_pspecs(cfg, shape_name, mesh, plan.tp)
     batch_shape = input_specs(cfg, shape_name, batch_override)
-    metrics_shardings = None
-    if plan.skip_update:  # grads output must carry the param shardings
-        metrics_shardings = {"loss": None,
-                             "grads": sharding.named(mesh, sspec.params)}
-
+    jitted, hooks, _ = jit_train_step(cfg, shape_name, mesh, plan, opt_cfg,
+                                      state_shape)
     with mesh:
         with ctx.activation_sharding(hooks):
-            jitted = jax.jit(
-                step_fn,
-                in_shardings=(sharding.named(mesh, sspec),
-                              sharding.named(mesh, bspec)),
-                out_shardings=(sharding.named(mesh, sspec),
-                               metrics_shardings),
-                donate_argnums=(0,),
-            )
             lowered = jitted.lower(state_shape, batch_shape)
     return lowered
 
