@@ -35,7 +35,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: channels,batch,filters,"
                          "padstride,cnns,granularity,roofline,tuned,"
-                         "calibration,plans,serving,sharding,training")
+                         "calibration,plans,serving,serving_slo,sharding,"
+                         "training")
     ap.add_argument("--plan", action="store_true",
                     help="also report plan-amortized dispatch overhead "
                          "(plan-once execute vs legacy per-call resolution)")
@@ -48,14 +49,15 @@ def main() -> None:
             "cnns": cnns.rows, "granularity": granularity.rows,
             "roofline": roofline_rows, "tuned": tuned.rows,
             "calibration": calibration.rows, "plans": plans.rows,
-            "serving": serving.rows, "sharding": sharding.rows,
-            "training": training.rows}
+            "serving": serving.rows, "serving_slo": serving.slo_rows,
+            "sharding": sharding.rows, "training": training.rows}
     # the plans/serving/sharding/training tables are opt-in (they JIT-warm
-    # whole plan ladders, need a forced multi-device host, or compile train
-    # steps): --plan appends plans, --only isolates the rest
+    # whole plan ladders, need a forced multi-device host, compile train
+    # steps, or pace live traffic for seconds): --plan appends plans,
+    # --only isolates the rest
     only = args.only.split(",") if args.only else [
-        m for m in mods if m not in ("plans", "serving", "sharding",
-                                     "training")]
+        m for m in mods if m not in ("plans", "serving", "serving_slo",
+                                     "sharding", "training")]
     if args.plan and "plans" not in only:
         only.append("plans")
     if args.json:

@@ -1,11 +1,19 @@
-"""Bursty multi-client conv serving through a prewarmed ``ConvServer``.
+"""Bursty multi-client whole-model CNN serving through a ``ConvScheduler``.
 
-Simulates clients firing single-image requests at the conv layers of the
-paper's CNNs in bursts.  The server prewarms every (layer x bucket) plan at
-startup — from the model's scene list, or from a saved registry artifact on
-restart — so the trace itself runs at steady state: zero plan builds, zero
-schedule resolutions, every dispatch a coalesced micro-batch padded to the
-family's bucket ladder.
+Clients hold ``ModelSession`` handles against registered nets (chained
+conv-scene pipelines from the paper CNNs) and fire single images with
+per-client latency deadlines; the scheduler coalesces concurrent requests
+along B, carries the activation through every layer in plan layout, and
+flushes partial buckets when a deadline approaches.  Every (layer x bucket)
+plan — pruned ladder and the full flush ladder — is prewarmed at startup,
+from the scene lists or from a saved registry artifact on restart, so the
+trace runs at steady state: zero plan builds, zero schedule resolutions.
+
+The trace has three phases: bursty deadline traffic, an **overload** burst
+that exceeds the bounded queue (sheds are counted and surface as
+``Overloaded`` at the submitter), and a recovery burst that must shed
+nothing.  Every accepted result is asserted bitwise-identical (f32) to
+dispatching the same image layer-by-layer through B=1 plans.
 
     PYTHONPATH=src python examples/serve_cnn.py \
         --nets alexnet,resnet --bursts 6 --clients 8 \
@@ -17,37 +25,92 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models.cnn import cnn_layer_scenes
-from repro.serve import ConvRequest, server_from_scenes
+from repro.models.cnn import cnn_chain_scenes
+from repro.serve import ConvScheduler, Overloaded, SchedConfig
+
+DEADLINE_S = 0.08          # per-client latency budget (interpret-mode CPU)
 
 
-def build_server(layers, max_batch: int):
+def build_scheduler(args):
     # slack=0 keeps the full pow2 ladder on these capped demo scenes (the
-    # model would prune overhead-dominated rungs; see bucket_ladder)
-    return server_from_scenes(layers, max_batch=max_batch, ladder_slack=0.0,
-                              strict=True)
+    # model would prune overhead-dominated rungs; see bucket_ladder); the
+    # occupancy target then must be explicit — the unpruned sweet spot is
+    # rung 1, which would flush every request solo and never exercise
+    # deadline gathering
+    sched = ConvScheduler(
+        max_batch=args.max_batch, ladder_slack=0.0, strict=True,
+        config=SchedConfig(max_queue=args.max_queue,
+                           occupancy_target=args.max_batch,
+                           flush_margin_s=0.01))
+    for net in args.nets.split(","):
+        sched.register_net(
+            net, cnn_chain_scenes(net, max_hw=args.max_hw,
+                                  max_ch=args.max_ch,
+                                  layers_per_net=args.layers_per_net))
+    return sched
 
 
-def run_trace(server, layers, *, bursts: int, clients: int, seed: int):
-    """Each burst: 1..clients requests against random layers, then drain —
-    the arrival pattern micro-batching exists for."""
+def first_scene(sched, net):
+    """The net's first-layer scene — the input-shape source for clients."""
+    return sched._layers[sched.nets()[net][0]].base
+
+
+def burst_phase(sched, sessions, *, bursts, clients, seed):
+    """Each burst: 1..clients one-image requests against random nets, each
+    carrying a deadline — the arrival pattern deadline flush exists for."""
     rng = random.Random(seed)
-    names = list(layers)
-    rid = 0
-    t0 = time.perf_counter()
+    nets = sorted(sessions)
+    accepted = []
     for _ in range(bursts):
         reqs = []
         for _ in range(rng.randint(1, clients)):
-            layer = rng.choice(names)
-            sc = layers[layer]
-            x = jax.random.normal(jax.random.PRNGKey(rid),
+            net = rng.choice(nets)
+            sc = first_scene(sched, net)
+            x = jax.random.normal(jax.random.PRNGKey(len(accepted)
+                                                     + len(reqs)),
                                   (sc.inH, sc.inW, sc.IC), jnp.float32)
-            reqs.append(ConvRequest(rid=rid, layer=layer, x=x))
-            rid += 1
-        outs = server.serve(reqs)
-        jax.block_until_ready(outs)
-    return rid, time.perf_counter() - t0
+            reqs.append(sessions[net].submit(x, deadline_s=DEADLINE_S))
+        sched.wait(reqs)
+        accepted.extend(reqs)
+    return accepted
+
+
+def overload_phase(sched, sessions, *, max_queue):
+    """Flood a stopped scheduler far past its bounded queue: the overflow
+    sheds (``Overloaded`` at the submitter under reject-newest), the
+    accepted prefix completes once the loop resumes — targeted loss, not
+    unbounded queue growth."""
+    sched.stop()
+    net = sorted(sessions)[0]
+    sc = first_scene(sched, net)
+    x = jax.random.normal(jax.random.PRNGKey(999),
+                          (sc.inH, sc.inW, sc.IC), jnp.float32)
+    accepted, shed = [], 0
+    for _ in range(2 * max_queue):
+        try:
+            accepted.append(sessions[net].submit(x))
+        except Overloaded:
+            shed += 1
+    sched.start()
+    sched.wait(accepted)
+    return accepted, shed
+
+
+def assert_parity(sched, reqs):
+    """Every accepted result must be bitwise what layer-by-layer B=1
+    dispatch produces — coalescing, padding, and pipelining are layout
+    moves, never numeric ones."""
+    for r in reqs:
+        ref = jnp.asarray(r.x)   # submit normalized this to [H, W, C, b]
+        for lname in sched.nets()[r.net]:
+            fam = sched._layers[lname]
+            plan = sched.registry.get_or_build(fam.base.with_batch(1))
+            ref = plan.execute(ref, fam.flt)
+        ref = ref[..., 0] if r._squeeze else ref
+        assert np.array_equal(np.asarray(r.out), np.asarray(ref)), \
+            f"request {r.rid} (net {r.net}) diverged from per-layer dispatch"
 
 
 def main() -> None:
@@ -59,6 +122,9 @@ def main() -> None:
                     help="spatial cap (interpret-mode CPU feasibility)")
     ap.add_argument("--max-ch", type=int, default=8, help="channel cap")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=16,
+                    help="bounded-queue admission limit (overload phase "
+                         "floods past it)")
     ap.add_argument("--bursts", type=int, default=6)
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--artifact", default="",
@@ -67,33 +133,55 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    layers = cnn_layer_scenes(args.nets.split(","), max_hw=args.max_hw,
-                              max_ch=args.max_ch,
-                              layers_per_net=args.layers_per_net)
-    server = build_server(layers, args.max_batch)
+    sched = build_scheduler(args)
+    layers = sched._layers
 
     t0 = time.perf_counter()
-    built = server.prewarm(artifact=args.artifact or None, compile=True)
+    built = sched.prewarm(artifact=args.artifact or None, compile=True)
     print(f"prewarmed {len(layers)} layers in {time.perf_counter() - t0:.1f}s "
           f"({built} plans built, rest pinned from artifact)")
-    print(server.describe())
+    print(sched.describe())
 
-    served, wall = run_trace(server, layers, bursts=args.bursts,
-                             clients=args.clients, seed=args.seed)
-    s = server.stats()
-    print(f"served {served} requests in {wall:.2f}s "
-          f"({served / wall:.0f} req/s): {s['dispatches']} dispatches, "
+    sessions = {net: sched.session(net) for net in sched.nets()}
+    sched.start()
+    t0 = time.perf_counter()
+    accepted = burst_phase(sched, sessions, bursts=args.bursts,
+                           clients=args.clients, seed=args.seed)
+    wall = time.perf_counter() - t0
+    s = sched.stats()
+    print(f"served {len(accepted)} model requests in {wall:.2f}s: "
+          f"{s['dispatches']} pipeline dispatches, "
           f"{s['mean_batch']:.1f} req/dispatch, "
-          f"lane occupancy {s['occupancy']:.2f} "
-          f"(pad waste {s['pad_waste_pct']:.0f}%)")
-    print(f"steady state: plan_misses={s['plan_misses']} "
-          f"plan_builds={s['plan_builds']} "
-          f"registry hit_rate={s['registry']['hit_rate']:.2f}")
-    assert s["plan_misses"] == 0 and s["plan_builds"] == 0, \
-        "a prewarmed server must serve without building plans"
+          f"deadline flushes {s['deadline_flushes']}, "
+          f"misses {s['deadline_misses']}/{s['deadline_requests']}")
+
+    over_accepted, shed = overload_phase(sched, sessions,
+                                         max_queue=args.max_queue)
+    s1 = sched.stats()
+    print(f"overload: {len(over_accepted)} accepted, {shed} shed "
+          f"(Overloaded at submitter), counter={s1['shed']:.0f}")
+    assert shed > 0 and s1["shed"] == shed, "overload burst must shed"
+    accepted.extend(over_accepted)
+
+    recovered = burst_phase(sched, sessions, bursts=1,
+                            clients=args.clients, seed=args.seed + 1)
+    s2 = sched.stats()
+    assert s2["shed"] == s1["shed"], "recovery burst must not shed"
+    print(f"recovered: {len(recovered)} requests, 0 shed")
+    accepted.extend(recovered)
+    sched.stop()
+
+    assert_parity(sched, accepted)
+    print(f"parity OK: {len(accepted)} accepted results bitwise-identical "
+          f"to per-layer B=1 dispatch")
+    print(f"steady state: plan_misses={s2['plan_misses']} "
+          f"plan_builds={s2['plan_builds']} "
+          f"registry hit_rate={s2['registry']['hit_rate']:.2f}")
+    assert s2["plan_misses"] == 0 and s2["plan_builds"] == 0, \
+        "a prewarmed scheduler must serve without building plans"
 
     if args.artifact:
-        path = server.save(args.artifact)
+        path = sched.save(args.artifact)
         print(f"saved plan repository -> {path} (next start prewarms from "
               f"it: pinned choices, zero schedule resolutions)")
     print("OK")

@@ -74,6 +74,37 @@ def metrics_report(doc: Dict) -> Dict:
             "hook_errors": c.get("repro.serve.dispatch_hook_errors", 0.0),
         }
 
+    # scheduler SLO derivations (repro.serve.sched): deadline health, shed
+    # pressure, flush-reason mix, and the latency quantiles an operator
+    # reads before reaching for a raw Perfetto trace
+    h = by_kind["histogram"]
+    if any(k in c for k in ("repro.serve.deadline_requests",
+                            "repro.serve.shed_total",
+                            "repro.serve.deadline_flushes")):
+        dl = c.get("repro.serve.deadline_requests", 0.0)
+        misses = c.get("repro.serve.deadline_misses", 0.0)
+        slo: Dict = {
+            "deadline_requests": dl,
+            "deadline_misses": misses,
+            "deadline_miss_rate": misses / dl if dl else 0.0,
+            "shed_total": c.get("repro.serve.shed_total", 0.0),
+            "flushes": {
+                "deadline": c.get("repro.serve.deadline_flushes", 0.0),
+                "occupancy": c.get("repro.serve.occupancy_flushes", 0.0),
+                "gather_timeout": c.get(
+                    "repro.serve.gather_timeout_flushes", 0.0),
+            },
+        }
+        for label, name in (("queue_wait", "repro.serve.queue_wait_s"),
+                            ("dispatch", "repro.serve.dispatch_s"),
+                            ("layer_dispatch",
+                             "repro.serve.layer_dispatch_s"),
+                            ("deadline_slack",
+                             "repro.serve.deadline_slack_s")):
+            if name in h:
+                slo[label] = h[name]
+        report["slo"] = slo
+
     drift = doc.get("drift")
     if drift:
         classes = drift.get("classes", {})
@@ -111,6 +142,23 @@ def print_metrics_report(report: Dict) -> None:
               f"occupancy={s['occupancy']:.3f} "
               f"pad_waste={s['pad_waste_pct']:.1f}% "
               f"hook_errors={s['hook_errors']:.0f}")
+    if "slo" in report:
+        s = report["slo"]
+        fl = s["flushes"]
+        print("== slo (scheduler) ==")
+        print(f"  deadline_requests={s['deadline_requests']:.0f} "
+              f"misses={s['deadline_misses']:.0f} "
+              f"miss_rate={s['deadline_miss_rate']:.3f} "
+              f"shed={s['shed_total']:.0f}")
+        print(f"  flushes: deadline={fl['deadline']:.0f} "
+              f"occupancy={fl['occupancy']:.0f} "
+              f"gather_timeout={fl['gather_timeout']:.0f}")
+        for label in ("queue_wait", "dispatch", "layer_dispatch",
+                      "deadline_slack"):
+            if label in s:
+                q = s[label]
+                print(f"  {label:<16} n={q['count']:<6.0f} "
+                      f"p50={_fmt_s(q['p50'])} p99={_fmt_s(q['p99'])}")
     if "drift" in report:
         d = report["drift"]
         print(f"== drift (threshold={d['threshold']}) ==")
@@ -152,11 +200,29 @@ def trace_report(doc: Dict) -> Dict:
             "p90_s": _percentile(durs, 0.9),
             "p99_s": _percentile(durs, 0.99),
             "max_s": durs[-1]}
-    return {"kind": "trace", "events": len(events),
-            "dropped_events": doc.get("otherData", {}).get(
-                "dropped_events", 0),
-            "wall_s": (span[1] - span[0]) * 1e-6 if events else 0.0,
-            "spans": spans}
+    report = {"kind": "trace", "events": len(events),
+              "dropped_events": doc.get("otherData", {}).get(
+                  "dropped_events", 0),
+              "wall_s": (span[1] - span[0]) * 1e-6 if events else 0.0,
+              "spans": spans}
+    # per-layer breakdown of whole-model pipeline dispatches: the
+    # scheduler's metrics histograms aggregate across layers, so the
+    # per-layer quantiles live here, keyed off the layer span args
+    layers: Dict[str, List[float]] = {}
+    for e in events:
+        if (e["name"] == "repro.serve.layer_dispatch"
+                and e.get("args", {}).get("layer")):
+            layers.setdefault(e["args"]["layer"], []).append(e["dur"] * 1e-6)
+    if layers:
+        per_layer = {}
+        for lname, durs in sorted(layers.items()):
+            durs.sort()
+            per_layer[lname] = {
+                "count": len(durs), "mean_s": sum(durs) / len(durs),
+                "p50_s": _percentile(durs, 0.5),
+                "p99_s": _percentile(durs, 0.99), "max_s": durs[-1]}
+        report["layers"] = per_layer
+    return report
 
 
 def print_trace_report(report: Dict) -> None:
@@ -168,6 +234,12 @@ def print_trace_report(report: Dict) -> None:
               f"mean={_fmt_s(s['mean_s'])} p50={_fmt_s(s['p50_s'])} "
               f"p90={_fmt_s(s['p90_s'])} p99={_fmt_s(s['p99_s'])} "
               f"max={_fmt_s(s['max_s'])}")
+    if "layers" in report:
+        print("== per-layer dispatch (model sessions) ==")
+        for lname, s in report["layers"].items():
+            print(f"  {lname:<34} n={s['count']:<6} "
+                  f"mean={_fmt_s(s['mean_s'])} p50={_fmt_s(s['p50_s'])} "
+                  f"p99={_fmt_s(s['p99_s'])} max={_fmt_s(s['max_s'])}")
 
 
 # --------------------------------------------------------------------------

@@ -125,6 +125,49 @@ def cnn_layer_scenes(nets=None, batch: int = 1, *,
     return out
 
 
+def cnn_chain_scenes(net: str, batch: int = 1, *,
+                     max_hw: int = 0, max_ch: int = 0,
+                     layers_per_net: int = 0) -> Dict[str, ConvScene]:
+    """A *chained* ``{"net/L<i>": scene}`` conv trunk for one paper CNN —
+    the whole-model serving input (``repro.serve.sched.register_net``).
+
+    ``cnn_scenes`` lists each net's representative conv layers with the
+    pooling between them elided, so consecutive scenes do not chain (layer
+    i's output geometry is not layer i+1's input).  A whole-model session
+    needs a valid chain (``validate_scene_chain``), so this keeps each
+    layer's filter/stride/pad/OC character but forces its input geometry to
+    the previous layer's output — the inter-layer pooling is folded into
+    the conv stride chain, the way ``vgg_style_scenes`` replaces pooling
+    with stride-2 convs.
+
+    ``max_hw``/``max_ch`` caps are applied *during* construction, not after:
+    capping a finished chain layer-by-layer (the ``proxy_scene`` route)
+    would break the OC -> IC / out -> in couplings.  Filters clamp to the
+    running spatial size (``f = min(flt, hw)``) and padding to ``f - 1`` so
+    every window stays valid however small the trunk gets.
+    """
+    all_scenes = cnn_scenes(batch)
+    if net not in all_scenes:
+        raise KeyError(f"unknown net {net!r}; have {sorted(all_scenes)}")
+    base = all_scenes[net]
+    if layers_per_net:
+        base = base[:layers_per_net]
+    out: Dict[str, ConvScene] = {}
+    hw = min(base[0].inH, max_hw) if max_hw else base[0].inH
+    ic = min(base[0].IC, max_ch) if max_ch else base[0].IC
+    for i, sc in enumerate(base):
+        oc = min(sc.OC, max_ch) if max_ch else sc.OC
+        f = min(sc.fltH, hw)
+        pad = min(sc.padH, f - 1) if f > 1 else 0
+        chained = ConvScene(B=batch, IC=ic, OC=oc, inH=hw, inW=hw,
+                            fltH=f, fltW=f, padH=pad, padW=pad,
+                            stdH=sc.stdH, stdW=sc.stdW, dtype=sc.dtype)
+        out[f"{net}/L{i}"] = chained
+        hw, ic = chained.outH, oc
+    validate_scene_chain(out)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Small runnable classifier on MG3MConv (end-to-end example / tests)
 # ---------------------------------------------------------------------------

@@ -324,6 +324,32 @@ class PlanRegistry:
         with self._lock:
             return dict(self._mem)
 
+    def warmed_buckets(self, scene: ConvScene,
+                       op: Union[ConvOp, str] = ConvOp.FPROP, *,
+                       policy: PolicySpec = "analytic",
+                       interpret: bool = True,
+                       use_pallas: bool = True) -> tuple:
+        """Every batch size of ``scene``'s family resident for ``op`` under
+        the given build options, ascending.  This is the sub-rung execution
+        probe for the scheduling layer: a deadline flush may execute any
+        warmed bucket without a steady-state resolution, so "which buckets
+        are free to dispatch at" is a registry question, not a ladder one.
+        A peek, not traffic: bumps neither hits nor misses and touches no
+        LRU order."""
+        op = ConvOp(op)
+        pol = policy_tag(policy)
+        base = scene.with_batch(1)
+        out = []
+        with self._lock:
+            for plan in self._mem.values():
+                if (plan.op is op and plan.policy == pol
+                        and plan.interpret == interpret
+                        and plan.use_pallas == use_pallas
+                        and getattr(plan, "shard_tag", None) is None
+                        and plan.scene.with_batch(1) == base):
+                    out.append(plan.scene.B)
+        return tuple(sorted(set(out)))
+
     # -- persistence -------------------------------------------------------
     def save(self, path: str) -> str:
         """Merge-on-save: union our plans with whatever is on disk, then

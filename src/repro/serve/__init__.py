@@ -1,15 +1,23 @@
 """repro.serve — serving engines.
 
 ``repro.serve.conv`` is the scene-bucketed micro-batching conv server
-(plan-prewarmed, coalescing along the batch axis); ``repro.serve.engine``
-is the LM continuous-batching engine.  The LM engine drags the transformer
-stack along, so it is intentionally *not* re-exported here — import
-``repro.serve.engine`` explicitly.
+(plan-prewarmed, coalescing along the batch axis); ``repro.serve.sched``
+is the latency-aware continuous-batching scheduler on top of it (deadline
+flush, admission control, whole-model ``ModelSession`` pipelines);
+``repro.serve.engine`` is the LM continuous-batching engine.  The LM
+engine drags the transformer stack along, so it is intentionally *not*
+re-exported here — import ``repro.serve.engine`` explicitly.
 """
 from repro.serve.conv import (ConvRequest, ConvServer, DispatchRecord,
-                              bucket_ladder, server_from_scenes)
+                              bucket_ladder, seeded_weights,
+                              server_from_scenes)
+from repro.serve.sched import (ConvScheduler, ModelRequest, ModelSession,
+                               Overloaded, SchedConfig,
+                               scheduler_from_scenes)
 
 __all__ = [
     "ConvRequest", "ConvServer", "DispatchRecord", "bucket_ladder",
-    "server_from_scenes",
+    "seeded_weights", "server_from_scenes",
+    "ConvScheduler", "ModelRequest", "ModelSession", "Overloaded",
+    "SchedConfig", "scheduler_from_scenes",
 ]

@@ -138,6 +138,12 @@ class ConvRequest:
     result comes back 3-D too.  ``out``, ``done``, and (on a failed
     dispatch) ``error`` are filled by the server on completion.
 
+    ``deadline_s`` is an optional latency budget in seconds, relative to
+    submission.  The base ``ConvServer`` dispatches on demand and merely
+    records it; the scheduling layer (``repro.serve.sched``) uses it to
+    flush partial buckets before the budget expires and to order the queue
+    under overload (EDF shed policy).
+
     ``eq=False``: requests are identity objects.  A value ``__eq__`` would
     compare the jax arrays (ambiguous truth value) and would let two
     requests with equal fields alias each other in the queue."""
@@ -146,16 +152,19 @@ class ConvRequest:
     layer: str
     x: jax.Array
     op: ConvOp = ConvOp.FPROP
+    deadline_s: Optional[float] = None
     out: Optional[jax.Array] = None
     done: bool = False
     error: Optional[BaseException] = None
     # internal: batch width, whether to squeeze the result (3-D input),
-    # submission timestamp (queue-wait metric), and the completion signal
-    # serve() waits on (set by whichever thread's step() dispatches the
-    # batch containing this request)
+    # submission timestamp (queue-wait metric), the absolute deadline
+    # (perf_counter clock, derived from deadline_s at submit), and the
+    # completion signal serve() waits on (set by whichever thread's step()
+    # dispatches the batch containing this request)
     _b: int = dataclasses.field(default=0, repr=False)
     _squeeze: bool = dataclasses.field(default=False, repr=False)
     _t_submit: float = dataclasses.field(default=0.0, repr=False)
+    _t_deadline: Optional[float] = dataclasses.field(default=None, repr=False)
     _event: Optional[threading.Event] = dataclasses.field(default=None,
                                                           repr=False)
 
@@ -377,15 +386,26 @@ class ConvServer:
                 f"request {req.rid} batch {x.shape[3]} exceeds the top "
                 f"ladder bucket {fam.ladder[-1]} of layer {req.layer!r}; "
                 f"split it or raise max_batch")
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(f"request {req.rid} deadline_s must be "
+                             f"positive, got {req.deadline_s}")
         req.x = x.astype(jnp.dtype(fam.base.dtype))
         req._b = x.shape[3]
         req.out, req.done, req.error = None, False, None
         req._event = threading.Event()
         req._t_submit = time.perf_counter()
+        req._t_deadline = (req._t_submit + req.deadline_s
+                           if req.deadline_s is not None else None)
         with self._lock:
-            self._queue.append(req)
+            self._enqueue(req)
             self._g_queue.set(len(self._queue))
         return req
+
+    def _enqueue(self, req: ConvRequest) -> None:
+        """Append a validated request to the queue.  Called under
+        ``self._lock``.  The scheduling layer overrides this with bounded
+        admission control and deadline-ordered insertion."""
+        self._queue.append(req)
 
     # -- dispatch ----------------------------------------------------------
     def _take_batch(self) -> List[ConvRequest]:
@@ -482,8 +502,19 @@ class ConvServer:
         tracing disabled the dispatch stays async (the histograms then time
         *enqueue*, not completion) and the record is published directly —
         no span object is ever allocated on that path."""
+        return self._dispatch(self._take_batch())
+
+    def _bucket_for(self, fam: _Family, op: ConvOp, total: int) -> int:
+        """Padded batch for a coalesced group of ``total`` lanes: the
+        smallest ladder rung that fits.  The scheduling layer overrides
+        this to also consider sub-rung flush buckets, priced by the cost
+        model's per-bucket predictions."""
+        return next(b for b in fam.ladder if b >= total)
+
+    def _dispatch(self, group: List[ConvRequest]) -> int:
+        """Execute one coalesced group (see ``step`` for the tracing
+        contract); returns requests served."""
         enabled = self.tracer.enabled
-        group = self._take_batch()
         if not group:
             return 0
         t_start = time.perf_counter()
@@ -497,7 +528,7 @@ class ConvServer:
                 fam = self._layers[group[0].layer]
                 op = group[0].op
                 total = sum(r._b for r in group)
-                bucket = next(b for b in fam.ladder if b >= total)
+                bucket = self._bucket_for(fam, op, total)
                 x = (group[0].x if len(group) == 1
                      else jnp.concatenate([r.x for r in group], axis=3))
                 if bucket > total:
@@ -673,22 +704,33 @@ class ConvServer:
         return "\n".join(lines)
 
 
+def seeded_weights(scenes: Mapping[str, ConvScene],
+                   weights: Optional[Mapping[str, jax.Array]] = None,
+                   *, seed: int = 0) -> Dict[str, jax.Array]:
+    """One FLT-layout weight per scene: the caller's where given, seeded
+    random otherwise — the serving layer only needs *a* weight per layer to
+    route traffic; real deployments pass trained ones."""
+    out: Dict[str, jax.Array] = {}
+    for i, (layer, scene) in enumerate(scenes.items()):
+        if weights is not None and layer in weights:
+            out[layer] = weights[layer]
+        else:
+            key = jax.random.PRNGKey(seed + i)
+            out[layer] = jax.random.normal(
+                key, scene.flt_shape(),
+                jnp.float32).astype(jnp.dtype(scene.dtype))
+    return out
+
+
 def server_from_scenes(scenes: Mapping[str, ConvScene],
                        weights: Optional[Mapping[str, jax.Array]] = None,
                        *, seed: int = 0, ops: Sequence[ConvOp]
                        = (ConvOp.FPROP,), **kwargs) -> ConvServer:
     """Build a ``ConvServer`` straight from a layer->scene map (e.g.
-    ``models.cnn.cnn_layer_scenes``).  Missing weights are seeded randomly —
-    the serving layer only needs *a* weight per layer to route traffic;
-    real deployments pass trained ones."""
+    ``models.cnn.cnn_layer_scenes``); see ``seeded_weights`` for the
+    missing-weight convention."""
     server = ConvServer(**kwargs)
-    for i, (layer, scene) in enumerate(scenes.items()):
-        if weights is not None and layer in weights:
-            flt = weights[layer]
-        else:
-            key = jax.random.PRNGKey(seed + i)
-            flt = jax.random.normal(key, scene.flt_shape(),
-                                    jnp.float32).astype(
-                                        jnp.dtype(scene.dtype))
-        server.register_layer(layer, scene, flt, ops=ops)
+    flts = seeded_weights(scenes, weights, seed=seed)
+    for layer, scene in scenes.items():
+        server.register_layer(layer, scene, flts[layer], ops=ops)
     return server
